@@ -1,0 +1,55 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (RoundRobinSequencer, destm_execute, make_store,
+                        occ_execute, pcc_execute, pogl_execute, run_all)
+from repro.core import metrics as M
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall-clock seconds of fn(*args) (jit-compiled callables)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run_engines(wl, *, engines=("pot", "pogl", "destm", "occ")):
+    """Run a workload through the engines; return {name: EngineReport}."""
+    store = make_store(wl.n_objects)
+    seq = jnp.asarray(
+        RoundRobinSequencer(n_root_lanes=wl.n_lanes).order_for(
+            wl.lanes.tolist()), jnp.int32)
+    res = run_all(wl.batch, store.values)
+    rn, wn = np.asarray(res.rn), np.asarray(res.wn)
+    out = {}
+    if "pot" in engines:
+        _, tr = pcc_execute(store, wl.batch, seq)
+        out["pot"] = M.report_pcc(tr, wl.batch, rn, wn)
+    if "pogl" in engines:
+        pogl_execute(store, wl.batch, seq)
+        out["pogl"] = M.report_pogl(wl.batch, rn, wn)
+    if "destm" in engines:
+        _, tr = destm_execute(store, wl.batch, seq,
+                              jnp.asarray(wl.lanes, jnp.int32), wl.n_lanes)
+        out["destm"] = M.report_destm(tr, wl.batch, rn, wn, wl.n_lanes)
+    if "occ" in engines:
+        arrival = jnp.arange(wl.batch.n_txns, dtype=jnp.int32)
+        _, tr = occ_execute(store, wl.batch, arrival)
+        out["occ"] = M.report_occ(tr, wl.batch, rn, wn)
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,47 @@
+"""Assemble the §Roofline table from results/dryrun/*.json.
+
+Per (arch × shape), single-pod 16×16 mesh: the three roofline terms in
+seconds (compute / HBM / collective), the dominant bottleneck, MODEL_
+FLOPS = 6·N·D (train) or 2·N_active·tokens (serve), and the useful-FLOP
+ratio.  Constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "analysis" not in rec:
+            continue
+        out.append(rec)
+    return out
+
+
+def run() -> None:
+    from repro.launch.roofline_model import terms_from_record
+    for rec in rows():
+        r = terms_from_record(rec)
+        emit(f"roofline[{rec['arch']},{rec['shape']}]",
+             r["bound_s"] * 1e6,
+             f"compute_s={r['compute_s']:.3e},"
+             f"memory_s={r['memory_s']:.3e},"
+             f"collective_s={r['collective_s']:.3e},"
+             f"bottleneck={r['bottleneck']},"
+             f"roofline_frac={r['roofline_fraction']:.3f},"
+             f"useful_ratio={r['useful_ratio']:.3f},"
+             f"flops_per_chip={r['flops_per_chip']:.3e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""Regenerate the §Tables section of EXPERIMENTS.md from
+results/dryrun/*.json (run after a dry-run sweep)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RESULTS = os.path.join(ROOT, "results", "dryrun")
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mode | 16x16 GB/chip | 2x16x16 GB/chip | "
+            "opt | mb | compile s (sp/mp) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(p))
+        sp = r["single_pod"]
+
+        def corrected(mem, mode):
+            if "alias_bytes" in mem:
+                base = (mem["argument_bytes"] + mem["output_bytes"]
+                        - mem["alias_bytes"] + mem["temp_bytes"])
+            elif mode in ("train", "decode"):
+                # donated state/cache: outputs alias the arguments
+                base = mem["argument_bytes"] + mem["temp_bytes"]
+            else:
+                base = (mem["argument_bytes"] + mem["output_bytes"]
+                        + mem["temp_bytes"])
+            if mode == "decode":
+                # CPU assigner cannot alias the donated cache through the
+                # layer scan: temp carries ~2 unaliased cache copies
+                base -= 2 * mem["argument_bytes"]
+            return max(base, 0)
+
+        mem = sp["memory"]
+        peak = corrected(mem, r["mode"]) / 1e9
+        mp = r.get("multi_pod", {})
+        mpeak = (corrected(mp["memory"], r["mode"]) / 1e9
+                 if mp.get("memory") else 0.0)
+        meta = sp["meta"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | {peak:.1f} | "
+            f"{mpeak:.1f} | {meta['optimizer']} | {meta['n_microbatches']}"
+            f" | {meta['compile_s']}/"
+            f"{mp.get('meta', {}).get('compile_s', '-')} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    import sys
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.launch.roofline_model import terms_from_record
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "bound | roof_frac | MFU-proxy | useful |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(p))
+        if "analysis" not in r:
+            continue
+        t = terms_from_record(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['bottleneck']} | {t['roofline_fraction']:.3f} | "
+            f"{t['mfu_proxy']:.3f} | {t['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(
+        r"<!-- TABLE:DRYRUN -->(?:.*?(?=\n### |\n8 documented|\Z))?",
+        "<!-- TABLE:DRYRUN -->\n" + dryrun_table() + "\n",
+        text, flags=re.S)
+    text = re.sub(
+        r"<!-- TABLE:ROOFLINE -->(?:.*?(?=\n8 documented|\Z))?",
+        "<!-- TABLE:ROOFLINE -->\n" + roofline_table() + "\n",
+        text, flags=re.S)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

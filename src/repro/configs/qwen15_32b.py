@@ -1,0 +1,16 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (GQA kv=40 = MHA) d_ff=27392
+vocab=152064 — QKV bias [hf:Qwen/Qwen1.5-32B family]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", family="dense", n_layers=64, d_model=5120,
+    n_heads=40, n_kv_heads=40, d_ff=27392, vocab=152064,
+    pattern=("attn",), mlp="swiglu", qkv_bias=True,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+    pattern=("attn",), mlp="swiglu", qkv_bias=True,
+)

@@ -1,0 +1,32 @@
+"""Pot core: preordered transactions for deterministic execution.
+
+Public API:
+    TStore / make_store / fingerprint        — versioned object store
+    TxnBatch / make_batch                    — transactions (dynamic r/w sets)
+    RoundRobinSequencer / ReplaySequencer / ExplicitSequencer
+    pcc_execute                              — Pot Concurrency Control
+    occ_execute / pogl_execute / destm_execute — baselines
+"""
+
+from repro.core.destm import DestmTrace, destm_execute
+from repro.core.occ import OccTrace, occ_execute
+from repro.core.pcc import (MODE_FAST, MODE_PREFIX, MODE_SPEC, PccTrace,
+                            pcc_execute)
+from repro.core.pogl import pogl_execute
+from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
+                                  RoundRobinSequencer, seq_to_order)
+from repro.core.tstore import TStore, fingerprint, make_store
+from repro.core.txn import (NOP, READ, RMW, WRITE, TxnBatch, TxnResult,
+                            make_batch, run_all, run_txn)
+
+__all__ = [
+    "TStore", "make_store", "fingerprint",
+    "TxnBatch", "TxnResult", "make_batch", "run_all", "run_txn",
+    "NOP", "READ", "WRITE", "RMW",
+    "RoundRobinSequencer", "ReplaySequencer", "ExplicitSequencer",
+    "seq_to_order",
+    "pcc_execute", "PccTrace", "MODE_FAST", "MODE_PREFIX", "MODE_SPEC",
+    "occ_execute", "OccTrace",
+    "pogl_execute",
+    "destm_execute", "DestmTrace",
+]

@@ -1,0 +1,157 @@
+"""DeSTM analog — the state of the art Pot compares against (§5, Fig. 10).
+
+DeSTM [Ravichandran et al. 2014] divides time into *rounds*: in each round
+every lane (thread) executes at most ONE transaction; commits happen in a
+deterministic token order within the round; and a **barrier** separates
+rounds — a transaction cannot start until every transaction of the
+previous round finished, and cannot commit until every transaction of its
+round has started (Fig. 10a/10b).  A transaction that conflicts with an
+earlier commit of its round re-executes while holding the token (DeSTM
+requires deterministic conflicts).
+
+Consequences the paper exploits and we measure:
+- a lane with n transactions needs >= n rounds even when nothing
+  conflicts (Pot commits arbitrarily many per round);
+- every transaction inherits the barrier wait of the slowest lane.
+
+Final state is deterministic and — under the same round-robin order —
+bitwise-equal to PoGL/PCC (asserted in tests).  Only the *cost structure*
+differs, which is exactly the paper's Fig. 7/9/10 story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.core.tstore import TStore
+from repro.core.txn import TxnBatch, run_all, run_txn
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DestmTrace:
+    commit_round: jax.Array  # (K,) int32
+    retries: jax.Array       # (K,) int32
+    rounds: jax.Array        # ()   int32
+    exec_ops: jax.Array      # ()   int32
+    barrier_ops: jax.Array   # ()   int32 — Σ_rounds Σ_lanes (max_cost - cost):
+                             # instruction-slots lanes idle at round barriers
+
+
+@functools.partial(jax.jit, static_argnames=("n_lanes", "max_rounds"))
+def destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
+                  lanes: jax.Array, n_lanes: int,
+                  max_rounds: int | None = None) -> tuple[TStore, DestmTrace]:
+    """seq: (K,) 1-based sequence numbers; lanes: (K,) lane of each txn.
+
+    Token order within a round = sequence order restricted to the round's
+    transactions (with the paper's shared round-robin sequencer this is the
+    lane order, matching DeSTM's token passing).
+    """
+    k = batch.n_txns
+    n_obj = store.n_objects
+    order = jnp.argsort(seq)
+    gv0 = store.gv
+
+    def round_body(state):
+        values, versions, done, rnd, tr = state
+
+        # ---- round membership: first pending txn (in seq order) per lane
+        def pick(carry, p):
+            taken = carry          # (n_lanes,) bool — lane already has a txn
+            t = order[p]
+            lane = lanes[t]
+            sel = (~done[t]) & (~taken[lane])
+            taken = taken.at[lane].max(sel)
+            return taken, sel
+
+        _, selected_pos = jax.lax.scan(
+            pick, jnp.zeros((n_lanes,), bool), jnp.arange(k))
+
+        # ---- speculative execution against the round-start snapshot
+        res = run_all(batch, values)
+
+        # ---- token-order commits; conflicting txns re-execute serially
+        def commit_scan(carry, p):
+            values, versions, written, tr_retries, tr_exec = carry
+            t = order[p]
+            sel = selected_pos[p]
+            conflict = protocol.footprint_conflicts(
+                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+
+            def commit_clean(args):
+                values, versions, written = args
+                values, versions = protocol.apply_writes(
+                    values, versions, res.waddrs[t], res.wvals[t], res.wn[t],
+                    gv0 + p + 1)
+                written = protocol.mark_writes(written, res.waddrs[t],
+                                               res.wn[t])
+                return values, versions, written
+
+            def commit_retry(args):
+                # token held: re-execute against committed state, commit.
+                # NB: mark the RETRY's write set — the speculative write
+                # set may differ (data-dependent addresses) and marking it
+                # would hide conflicts from later round members.
+                values, versions, written = args
+                row = jax.tree.map(lambda a: a[t], batch)
+                raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
+                del raddrs2, rn2
+                values, versions = protocol.apply_writes(
+                    values, versions, waddrs2, wvals2, wn2, gv0 + p + 1)
+                written = protocol.mark_writes(written, waddrs2, wn2)
+                return values, versions, written
+
+            values, versions, written = jax.lax.cond(
+                sel,
+                lambda a: jax.lax.cond(conflict, commit_retry, commit_clean,
+                                       a),
+                lambda a: a, (values, versions, written))
+            tr_retries = tr_retries.at[t].add((sel & conflict).astype(jnp.int32))
+            tr_exec = tr_exec + jnp.where(
+                sel, batch.n_ins[t] * (1 + conflict.astype(jnp.int32)), 0)
+            return (values, versions, written, tr_retries, tr_exec), None
+
+        (values, versions, _, retries, exec_ops), _ = jax.lax.scan(
+            commit_scan,
+            (values, versions, jnp.zeros((n_obj,), bool),
+             tr["retries"], tr["exec_ops"]),
+            jnp.arange(k))
+
+        # ---- barrier accounting: lanes idle until the slowest finishes
+        sel_t = jnp.zeros((k,), bool).at[order].set(selected_pos)
+        cost = jnp.where(sel_t, batch.n_ins, 0)
+        round_max = cost.max()
+        n_sel = sel_t.sum(dtype=jnp.int32)
+        barrier_ops = tr["barrier_ops"] + jnp.where(
+            n_sel > 0, n_sel * round_max - cost.sum(dtype=jnp.int32), 0)
+
+        done = done | sel_t
+        commit_round = jnp.where(sel_t, rnd, tr["commit_round"])
+        tr = dict(tr, retries=retries, exec_ops=exec_ops,
+                  barrier_ops=barrier_ops, commit_round=commit_round)
+        return values, versions, done, rnd + 1, tr
+
+    def cond(state):
+        _, _, done, rnd, _ = state
+        return (~done.all()) & (rnd < limit)
+
+    limit = max_rounds if max_rounds is not None else k + 1
+    tr0 = dict(commit_round=jnp.full((k,), -1, jnp.int32),
+               retries=jnp.zeros((k,), jnp.int32),
+               exec_ops=jnp.zeros((), jnp.int32),
+               barrier_ops=jnp.zeros((), jnp.int32))
+    values, versions, done, rnd, tr = jax.lax.while_loop(
+        cond, round_body,
+        (store.values, store.versions, jnp.zeros((k,), bool),
+         jnp.zeros((), jnp.int32), tr0))
+
+    trace = DestmTrace(commit_round=tr["commit_round"], retries=tr["retries"],
+                       rounds=rnd, exec_ops=tr["exec_ops"],
+                       barrier_ops=tr["barrier_ops"])
+    return TStore(values=values, versions=versions, gv=store.gv + k), trace

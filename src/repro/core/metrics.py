@@ -1,0 +1,146 @@
+"""Structural cost model over engine traces.
+
+On a 1-CPU container we cannot reproduce POWER8 wall-clock; instead we
+account *instruction-slots* — the deterministic unit the engines count
+exactly — and build the paper's figures from them:
+
+- ``critical_path``: Σ over engine rounds of the most expensive
+  transaction executed in that round = parallel makespan with one lane per
+  transaction.  PoGL's critical path is the serial sum (global lock).
+- ``wait_rounds``: rounds a transaction spent executed-but-not-committed
+  (Fig. 9's "time waiting for turn").
+- ``work``: total instruction-slots executed including retries
+  (speculation waste).
+
+Speculative instrumentation overhead (read-set tracking, write buffering,
+validation) is charged per tracked word, mirroring what the paper's Fig. 6
+microbenchmark measures per access.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SPEC_TRACK_COST = 1.0   # per tracked read/write word (buffering, logging)
+VALIDATE_COST = 1.0     # per validated read word
+
+
+@dataclasses.dataclass
+class EngineReport:
+    name: str
+    rounds: int
+    work_ops: float          # total executed instruction slots (w/ retries)
+    critical_path: float     # parallel makespan in op-slots
+    total_wait_rounds: int
+    retries: int
+    fast_commits: int        # MODE_FAST commits (head of prefix)
+    prefix_commits: int      # simultaneous-fast (promoted) commits
+    throughput: float        # txns per critical-path op-slot
+
+    def row(self) -> str:
+        return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
+                f"{self.critical_path:.0f},{self.total_wait_rounds},"
+                f"{self.retries},{self.fast_commits},{self.prefix_commits},"
+                f"{self.throughput:.5f}")
+
+
+HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
+          "fast_commits,prefix_commits,throughput")
+
+
+def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
+    base = np.asarray(n_ins, dtype=np.float64)
+    if fast:
+        return base  # direct reads/writes, no tracking, no validation
+    return base + SPEC_TRACK_COST * (np.asarray(rn) + np.asarray(wn)) \
+        + VALIDATE_COST * np.asarray(rn)
+
+
+def report_pcc(trace, batch, res_rn, res_wn) -> EngineReport:
+    from repro.core.pcc import MODE_FAST, MODE_PREFIX
+    n_ins = np.asarray(batch.n_ins)
+    commit_round = np.asarray(trace.commit_round)
+    first_round = np.asarray(trace.first_round)
+    mode = np.asarray(trace.mode)
+    rounds = int(trace.rounds)
+    fast = mode == MODE_FAST
+    cost_final = _txn_cost(n_ins, res_rn, res_wn, fast=False)
+    cost_final[fast] = n_ins[fast]  # fast path: uninstrumented
+    # executions before the commit round are retries at speculative cost
+    retries = np.asarray(trace.retries)
+    work = float(np.sum(cost_final + retries *
+                        _txn_cost(n_ins, res_rn, res_wn, fast=False)))
+    # critical path: per round, max cost among txns executing that round
+    cp = 0.0
+    for r in range(rounds):
+        in_flight = (first_round <= r) & (commit_round >= r)
+        if in_flight.any():
+            cp += float(np.max(cost_final[in_flight]))
+    k = len(n_ins)
+    return EngineReport(
+        name="pot", rounds=rounds, work_ops=work, critical_path=cp,
+        total_wait_rounds=int(np.sum(trace.wait_rounds)),
+        retries=int(retries.sum()),
+        fast_commits=int(fast.sum()),
+        prefix_commits=int((mode == MODE_PREFIX).sum()),
+        throughput=k / cp if cp else float("inf"))
+
+
+def report_pogl(batch, res_rn, res_wn) -> EngineReport:
+    n_ins = np.asarray(batch.n_ins, dtype=np.float64)
+    k = len(n_ins)
+    cp = float(n_ins.sum())  # strictly serial, uninstrumented
+    return EngineReport(
+        name="pogl", rounds=k, work_ops=cp, critical_path=cp,
+        total_wait_rounds=0, retries=0, fast_commits=k, prefix_commits=0,
+        throughput=k / cp if cp else float("inf"))
+
+
+def report_destm(trace, batch, res_rn, res_wn, n_lanes: int) -> EngineReport:
+    n_ins = np.asarray(batch.n_ins)
+    commit_round = np.asarray(trace.commit_round)
+    retries = np.asarray(trace.retries)
+    rounds = int(trace.rounds)
+    cost = _txn_cost(n_ins, res_rn, res_wn, fast=False)
+    # round barrier: parallel first executions (max) + token-serialized
+    # re-executions of conflicting members (sum), per DeSTM's round rule.
+    cp = 0.0
+    wait = 0
+    for r in range(rounds):
+        sel = commit_round == r
+        if sel.any():
+            round_cost = float(np.max(cost[sel])) + float(
+                np.sum(cost[sel] * retries[sel]))
+            cp += round_cost
+            # every member waits for the barrier: each non-slowest member
+            # idles this round (Fig. 10 start/commit waiting).
+            wait += int(np.sum(cost[sel] * (1 + retries[sel]) < round_cost))
+    k = len(n_ins)
+    return EngineReport(
+        name="destm", rounds=rounds, work_ops=float(np.sum(cost * (1 + retries))),
+        critical_path=cp, total_wait_rounds=wait, retries=int(retries.sum()),
+        fast_commits=0, prefix_commits=0,
+        throughput=k / cp if cp else float("inf"))
+
+
+def report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
+    n_ins = np.asarray(batch.n_ins)
+    retries = np.asarray(trace.retries)
+    waves = int(trace.waves)
+    cost = _txn_cost(n_ins, res_rn, res_wn, fast=False)
+    cp = 0.0
+    commit_wave = np.zeros(len(n_ins), np.int64)
+    # txn committed in wave = retries (it retried that many waves)
+    commit_wave = retries
+    for w in range(waves):
+        in_flight = commit_wave >= w
+        if in_flight.any():
+            cp += float(np.max(cost[in_flight]))
+    k = len(n_ins)
+    return EngineReport(
+        name="occ", rounds=waves, work_ops=float(np.sum(cost * (1 + retries))),
+        critical_path=cp, total_wait_rounds=0, retries=int(retries.sum()),
+        fast_commits=0, prefix_commits=0,
+        throughput=k / cp if cp else float("inf"))

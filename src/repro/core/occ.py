@@ -1,0 +1,114 @@
+"""Baseline OCC — *traditional transactions* (paper §2, Fig. 2a).
+
+Traditional OCC intertwines ordering with concurrency control: the final
+serialization order is whatever the runtime interleaving produced.  We
+model the interleaving with an explicit ``arrival`` permutation (which
+transaction reaches its validation/write phase first); the engine commits
+non-conflicting transactions in arrival-order waves.
+
+The point this baseline exists to make (and the tests assert): the final
+store DEPENDS on ``arrival`` — different interleavings, different outcome
+— which is precisely the nondeterminism Pot eliminates.  It also records
+the commit order so it can be replayed through ``ReplaySequencer``
+(record/replay use case, paper §2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.core.tstore import TStore
+from repro.core.txn import TxnBatch, run_all
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OccTrace:
+    commit_pos: jax.Array   # (K,) int32 — global commit position (0-based)
+    retries: jax.Array      # (K,) int32
+    waves: jax.Array        # ()   int32 — parallel commit waves
+    exec_ops: jax.Array     # ()   int32
+
+
+@functools.partial(jax.jit, static_argnames=("max_waves",))
+def occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
+                max_waves: int | None = None) -> tuple[TStore, OccTrace]:
+    """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th."""
+    k = batch.n_txns
+    n_obj = store.n_objects
+
+    def wave_body(state):
+        values, versions, done, n_comm, wave, tr = state
+        res = run_all(batch, values)
+
+        def commit_scan(carry, p):
+            written = carry
+            t = arrival[p]
+            pending = ~done[t]
+            conflict = protocol.footprint_conflicts(
+                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+            committing = pending & ~conflict   # NOTE: no prefix/order rule
+            written = jax.lax.cond(
+                committing,
+                lambda w: protocol.mark_writes(w, res.waddrs[t], res.wn[t]),
+                lambda w: w, written)
+            return written, committing
+
+        _, committing_pos = jax.lax.scan(
+            commit_scan, jnp.zeros((n_obj,), bool), jnp.arange(k))
+
+        # write-back in arrival order; commit position = running count
+        commit_idx = n_comm + jnp.cumsum(committing_pos) - 1
+
+        def apply_scan(carry, p):
+            vals, vers = carry
+            t = arrival[p]
+
+            def do(args):
+                v, ve = args
+                return protocol.apply_writes(
+                    v, ve, res.waddrs[t], res.wvals[t], res.wn[t],
+                    commit_idx[p] + 1)
+
+            vals, vers = jax.lax.cond(
+                committing_pos[p], do, lambda a: a, (vals, vers))
+            return (vals, vers), None
+
+        (values, versions), _ = jax.lax.scan(
+            apply_scan, (values, versions), jnp.arange(k))
+
+        pending_t = ~done
+        commit_pos = tr["commit_pos"].at[arrival].max(
+            jnp.where(committing_pos, commit_idx, -1))
+        retries = tr["retries"] + (
+            pending_t & ~jnp.zeros_like(pending_t).at[arrival].set(
+                committing_pos)).astype(jnp.int32)
+        exec_ops = tr["exec_ops"] + jnp.where(
+            pending_t, batch.n_ins, 0).sum(dtype=jnp.int32)
+        done = done.at[arrival].max(committing_pos)
+        tr = dict(tr, commit_pos=commit_pos, retries=retries,
+                  exec_ops=exec_ops)
+        return (values, versions, done,
+                n_comm + committing_pos.sum(dtype=jnp.int32), wave + 1, tr)
+
+    def cond(state):
+        _, _, done, _, wave, _ = state
+        return (~done.all()) & (wave < limit)
+
+    limit = max_waves if max_waves is not None else k + 1
+    tr0 = dict(commit_pos=jnp.full((k,), -1, jnp.int32),
+               retries=jnp.zeros((k,), jnp.int32),
+               exec_ops=jnp.zeros((), jnp.int32))
+    values, versions, done, n_comm, wave, tr = jax.lax.while_loop(
+        cond, wave_body,
+        (store.values, store.versions, jnp.zeros((k,), bool),
+         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), tr0))
+
+    trace = OccTrace(commit_pos=tr["commit_pos"], retries=tr["retries"],
+                     waves=wave, exec_ops=tr["exec_ops"])
+    return TStore(values=values, versions=versions, gv=store.gv + n_comm), trace

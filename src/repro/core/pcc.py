@@ -1,0 +1,227 @@
+"""Pot Concurrency Control (PCC) — the paper's contribution (§2.2), adapted
+to a dataflow runtime.
+
+Round-based prefix commit
+-------------------------
+Each engine round:
+
+1. **Speculative read phase** — every pending transaction executes
+   (vmapped) against the committed store image (deferred updates, logged
+   footprints: OCC read phase, Fig. 2a/2b).
+2. **Ordered commit** — walking transactions in *sequence order* (the
+   order fixed by the sequencer before execution), commit the maximal
+   in-order prefix of pending transactions whose footprints do not overlap
+   the writes of transactions committing earlier in the same round
+   (paper §2.2.2 "ordered commits" + §2.2.3 "multiple simultaneous fast
+   transactions": a string of successive compatible transactions commits
+   together).
+3. The conflicting suffix re-executes next round against the new store
+   (abort & retry, overlapping its predecessors' commit wait exactly as
+   speculative transactions overlap waiting in the paper).
+
+Transaction modes fall out structurally:
+
+- the **head** of the pending prefix is the paper's *fast transaction*: its
+  read phase ran against the fully-committed store and nothing can commit
+  before it, so it needs **no validation** — it always commits (progress
+  guarantee), and on TPU its write-back takes the direct-update Pallas
+  kernel with no version tracking (kernels/commit.py).
+- prefix members behind the head are *promoted* transactions
+  (compatibility-checked fast commits / live promotion, §2.2.3);
+- the remainder stay *speculative* and retry.
+
+Determinism: the result depends only on (store, transactions, sequence
+order) — never on arrival order, lane count, or timing.  ``pcc_execute``
+takes an ``arrival`` permutation argument solely so tests can prove the
+output is invariant to it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.core.tstore import TStore
+from repro.core.txn import TxnBatch, TxnResult, run_all, run_txn
+
+MODE_UNSET, MODE_SPEC, MODE_PREFIX, MODE_FAST = 0, 1, 2, 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PccTrace:
+    """Per-transaction trace (indexed by txn index, not seq position)."""
+
+    commit_round: jax.Array  # (K,) int32 — engine round where txn committed
+    first_round: jax.Array   # (K,) int32 — round of first speculative exec
+    retries: jax.Array       # (K,) int32 — re-executions (aborts)
+    mode: jax.Array          # (K,) int32 — MODE_FAST / MODE_PREFIX / MODE_SPEC
+    wait_rounds: jax.Array   # (K,) int32 — rounds spent executed-but-waiting
+    rounds: jax.Array        # ()   int32 — total engine rounds
+    validation_words: jax.Array  # () int32 — total read-set words validated
+    exec_ops: jax.Array      # ()   int32 — total instructions executed (incl. retries)
+    promotions: jax.Array    # ()   int32 — live promotions (§2.2.3)
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",
+                                              "live_promotion"))
+def pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
+                max_rounds: int | None = None,
+                live_promotion: bool = True) -> tuple[TStore, PccTrace]:
+    """Execute a batch of preordered transactions under PCC.
+
+    Args:
+      store: committed TStore.
+      batch: K transactions (dynamic read/write sets).
+      seq:   (K,) int32 — 1-based sequence numbers from the sequencer
+             (a permutation of 1..K).
+      live_promotion: paper §2.2.3 — after the prefix commits, the next
+             pending transaction has become the fast transaction (all
+             predecessors committed); it re-executes against the updated
+             store within the SAME round and commits unconditionally
+             (its abort-and-retry-in-fast-mode path).  Halves the round
+             count on conflict chains; False gives the Pot* ablation.
+    Returns:
+      (new store, trace).  ``new_store.gv`` equals ``store.gv + K``.
+    """
+    k = batch.n_txns
+    n_obj = store.n_objects
+    order = jnp.argsort(seq)  # order[p] = txn index at seq position p
+    gv0 = store.gv
+
+    def round_body(state):
+        values, versions, gv, n_comm, rnd, tr = state
+        res: TxnResult = run_all(batch, values)
+
+        # --- ordered commit: maximal non-conflicting in-order prefix -----
+        def commit_scan(carry, p):
+            written, alive = carry
+            t = order[p]
+            pending = p >= n_comm
+            conflict = protocol.footprint_conflicts(
+                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+            committing = alive & pending & ~conflict
+            written = jax.lax.cond(
+                committing,
+                lambda w: protocol.mark_writes(w, res.waddrs[t], res.wn[t]),
+                lambda w: w, written)
+            alive = alive & (committing | ~pending)
+            return (written, alive), committing
+
+        (_, _), committing_pos = jax.lax.scan(
+            commit_scan,
+            (jnp.zeros((n_obj,), bool), jnp.asarray(True)),
+            jnp.arange(k))
+
+        # --- write-back in sequence order --------------------------------
+        def apply_scan(carry, p):
+            vals, vers = carry
+            t = order[p]
+            sn = gv0 + p + 1
+
+            def do(args):
+                v, ve = args
+                return protocol.apply_writes(
+                    v, ve, res.waddrs[t], res.wvals[t], res.wn[t], sn)
+
+            vals, vers = jax.lax.cond(
+                committing_pos[p], do, lambda a: a, (vals, vers))
+            return (vals, vers), None
+
+        (values, versions), _ = jax.lax.scan(
+            apply_scan, (values, versions), jnp.arange(k))
+
+        n_new = committing_pos.sum(dtype=jnp.int32)
+        gv = gv + n_new
+
+        # ---- live promotion (paper §2.2.3): the first NON-committing
+        # pending transaction is now the fast transaction — re-execute it
+        # against the freshly-committed store and commit unconditionally.
+        promoted_pos = -jnp.ones((), jnp.int32)
+        if live_promotion:
+            head_pos = n_comm + n_new
+
+            def promote(args):
+                values, versions, gv = args
+                t = order[jnp.clip(head_pos, 0, k - 1)]
+                row = jax.tree.map(lambda a: a[t], batch)
+                raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
+                del raddrs2, rn2
+                values, versions = protocol.apply_writes(
+                    values, versions, waddrs2, wvals2, wn2,
+                    gv0 + head_pos + 1)
+                return values, versions, gv + 1
+
+            do_promote = head_pos < k
+            values, versions, gv = jax.lax.cond(
+                do_promote, promote, lambda a: a, (values, versions, gv))
+            promoted_pos = jnp.where(do_promote, head_pos, -1)
+            n_new = n_new + do_promote.astype(jnp.int32)
+
+        # --- trace bookkeeping (by txn index) ----------------------------
+        pos = jnp.arange(k)
+        pending_pos = pos >= n_comm
+        is_head = pos == n_comm
+        promoted_mask = pos == promoted_pos
+        committing_all = committing_pos | promoted_mask
+        mode_pos = jnp.where(
+            committing_all,
+            jnp.where(is_head | promoted_mask, MODE_FAST, MODE_PREFIX),
+            jnp.where(pending_pos, MODE_SPEC, MODE_UNSET))
+        # scatter position-indexed info back to txn order
+        commit_round = tr["commit_round"].at[order].max(
+            jnp.where(committing_all, rnd, -1))
+        first_round = tr["first_round"].at[order].min(
+            jnp.where(pending_pos, rnd, jnp.iinfo(jnp.int32).max))
+        retries = tr["retries"].at[order].add(
+            (pending_pos & ~committing_all).astype(jnp.int32))
+        mode = tr["mode"].at[order].max(mode_pos)
+        wait_rounds = tr["wait_rounds"].at[order].add(
+            (pending_pos & ~committing_all).astype(jnp.int32))
+        # validation: head (fast) validates nothing; everyone else pending
+        # validates its read set this round (paper Fig. 2b line 9 / 2c line 2)
+        rn_pos = res.rn[order]
+        validation_words = tr["validation_words"] + jnp.where(
+            pending_pos & ~is_head, rn_pos, 0).sum(dtype=jnp.int32)
+        exec_ops = tr["exec_ops"] + jnp.where(
+            pending_pos, batch.n_ins[order], 0).sum(dtype=jnp.int32) \
+            + jnp.where(promoted_mask, batch.n_ins[order],
+                        0).sum(dtype=jnp.int32)  # promotion re-execution
+        promotions = tr["promotions"] + promoted_mask.sum(dtype=jnp.int32)
+        tr = dict(tr, commit_round=commit_round, first_round=first_round,
+                  retries=retries, mode=mode, wait_rounds=wait_rounds,
+                  validation_words=validation_words, exec_ops=exec_ops,
+                  promotions=promotions)
+        return values, versions, gv, n_comm + n_new, rnd + 1, tr
+
+    def cond(state):
+        *_, n_comm, rnd, _ = state
+        return (n_comm < k) & (rnd < limit)
+
+    limit = max_rounds if max_rounds is not None else k + 1
+    tr0 = dict(
+        commit_round=jnp.full((k,), -1, jnp.int32),
+        first_round=jnp.full((k,), jnp.iinfo(jnp.int32).max, jnp.int32),
+        retries=jnp.zeros((k,), jnp.int32),
+        mode=jnp.zeros((k,), jnp.int32),
+        wait_rounds=jnp.zeros((k,), jnp.int32),
+        validation_words=jnp.zeros((), jnp.int32),
+        exec_ops=jnp.zeros((), jnp.int32),
+        promotions=jnp.zeros((), jnp.int32),
+    )
+    values, versions, gv, n_comm, rnd, tr = jax.lax.while_loop(
+        cond, round_body,
+        (store.values, store.versions, store.gv, jnp.zeros((), jnp.int32),
+         jnp.zeros((), jnp.int32), tr0))
+
+    trace = PccTrace(
+        commit_round=tr["commit_round"], first_round=tr["first_round"],
+        retries=tr["retries"], mode=tr["mode"],
+        wait_rounds=tr["wait_rounds"], rounds=rnd,
+        validation_words=tr["validation_words"], exec_ops=tr["exec_ops"],
+        promotions=tr["promotions"])
+    return TStore(values=values, versions=versions, gv=gv), trace

@@ -1,0 +1,38 @@
+"""PoGL — Preordered Global Lock (paper §4.1.2).
+
+The "trivial" implementation of preordered transactions: execute strictly
+serially in the sequence order, no speculation.  Deterministic by
+construction; zero parallelism.  Doubles as the **serial oracle** for
+property tests — every other deterministic engine must produce a store
+image bitwise-equal to PoGL's.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.core.tstore import TStore
+from repro.core.txn import TxnBatch, run_txn
+
+
+@jax.jit
+def pogl_execute(store: TStore, batch: TxnBatch, seq: jax.Array) -> TStore:
+    k = batch.n_txns
+    order = jnp.argsort(seq)
+    gv0 = store.gv
+
+    def step(carry, p):
+        values, versions = carry
+        t = order[p]
+        row = jax.tree.map(lambda a: a[t], batch)
+        raddrs, rn, waddrs, wvals, wn = run_txn(row, values)
+        del raddrs, rn
+        values, versions = protocol.apply_writes(
+            values, versions, waddrs, wvals, wn, gv0 + p + 1)
+        return (values, versions), None
+
+    (values, versions), _ = jax.lax.scan(
+        step, (store.values, store.versions), jnp.arange(k))
+    return TStore(values=values, versions=versions, gv=store.gv + k)

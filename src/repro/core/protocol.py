@@ -1,0 +1,55 @@
+"""Shared pieces of the concurrency-control engines: conflict detection and
+ordered write-back over transaction footprints (read/write sets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def footprint_conflicts(written: jax.Array, raddrs, rn, waddrs, wn) -> jax.Array:
+    """Does this txn's footprint overlap ``written`` (O,) bool?
+
+    This is the validation step (paper Fig. 2b line 9): a read-write or
+    write-write overlap with a transaction that committed after our read
+    phase means the speculation is stale.
+    """
+    length = raddrs.shape[0]
+    idx = jnp.arange(length)
+    r_hit = jnp.any(jnp.where(idx < rn, written[raddrs], False))
+    w_hit = jnp.any(jnp.where(idx < wn, written[waddrs], False))
+    return r_hit | w_hit
+
+
+def mark_writes(written: jax.Array, waddrs, wn) -> jax.Array:
+    """written |= this txn's write set."""
+    length = waddrs.shape[0]
+    n_obj = written.shape[0]
+    tgt = jnp.where(jnp.arange(length) < wn, waddrs, n_obj)
+    return written.at[tgt].set(True, mode="drop")
+
+
+def dedup_last_writer(waddrs, wn):
+    """Mask selecting, per address, only the LAST write-set entry (a txn may
+    write the same object twice; the later deferred write must win)."""
+    length = waddrs.shape[0]
+    idx = jnp.arange(length)
+    valid = idx < wn
+    shadowed = (
+        (waddrs[None, :] == waddrs[:, None])
+        & (idx[None, :] > idx[:, None])
+        & valid[None, :]
+    ).any(axis=1)
+    return valid & ~shadowed
+
+
+def apply_writes(values, versions, waddrs, wvals, wn, seq_no):
+    """Write-back one committing txn: install deferred values and stamp the
+    objects' versions with the txn's sequence number (paper §3.1: sequence
+    numbers retrofitted as TL2 versions)."""
+    n_obj = values.shape[0]
+    keep = dedup_last_writer(waddrs, wn)
+    tgt = jnp.where(keep, waddrs, n_obj)
+    values = values.at[tgt].set(wvals, mode="drop")
+    versions = versions.at[tgt].set(seq_no, mode="drop")
+    return values, versions

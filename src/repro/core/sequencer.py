@@ -1,0 +1,148 @@
+"""Ordering phase: the Pot sequencer (paper §2.1).
+
+The sequencer runs *before* execution and assigns every transaction a
+sequence number — its place in the deterministic serialization order.  It
+is a host-side control-plane component by design (the whole point of
+preordered transactions is that ordering is decoupled from the jitted
+execution phase).
+
+Implemented sequencers:
+
+- ``RoundRobinSequencer`` — the paper's generic sequencer: derives the
+  transaction order from a deterministic order over *lanes* (our threads).
+  Lanes form a tree (the main lane is the root; a spawned lane is a child
+  of its spawner) and the lane order is the tree's post-order traversal.
+  Lane start/stop events are processed as if they were transactions, so
+  the order is deterministic under *elastic scaling* (lanes joining and
+  leaving mid-run) — this is how the paper handles thread create/join and
+  how this framework handles workers joining/leaving a job.
+- ``ReplaySequencer`` — replays a recorded commit order (record/replay
+  debugging, §2.1 "application-specific sequencers").
+- ``ExplicitSequencer`` — a fully explicit order; detects the hang the
+  paper warns about (a lane never produces the transaction the order is
+  waiting for) and raises instead of deadlocking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Lane:
+    lane_id: int
+    parent: int | None
+    children: list[int] = dataclasses.field(default_factory=list)
+    alive: bool = True
+
+
+class RoundRobinSequencer:
+    """Round-robin over the post-order lane tree (paper §2.1).
+
+    ``get_seq_no(lane_id)`` hands out the next sequence number for that
+    lane; numbers are globally consecutive starting at 1 and reflect a
+    round-robin interleaving of the live lanes in post-order.
+    """
+
+    def __init__(self, n_root_lanes: int = 1):
+        self.lanes: dict[int, Lane] = {
+            i: Lane(i, None) for i in range(n_root_lanes)}
+        self._next_sn = 1
+        # per-lane FIFO of pre-assigned numbers (round-robin schedule)
+        self._pending: dict[int, list[int]] = {}
+        self._order_log: list[tuple[int, int]] = []  # (sn, lane)
+
+    # -- lane tree management (start/stop are sequenced events) ----------
+    def spawn_lane(self, parent: int, lane_id: int | None = None) -> int:
+        new_id = lane_id if lane_id is not None else (max(self.lanes) + 1)
+        assert new_id not in self.lanes
+        self.lanes[new_id] = Lane(new_id, parent)
+        self.lanes[parent].children.append(new_id)
+        return new_id
+
+    def stop_lane(self, lane_id: int) -> None:
+        self.lanes[lane_id].alive = False
+
+    def lane_order(self) -> list[int]:
+        """Post-order traversal of the lane tree, live lanes only."""
+        out: list[int] = []
+
+        def visit(lid: int):
+            for c in self.lanes[lid].children:
+                visit(c)
+            if self.lanes[lid].alive:
+                out.append(lid)
+
+        roots = [l.lane_id for l in self.lanes.values() if l.parent is None]
+        for r in sorted(roots):
+            visit(r)
+        return out
+
+    # -- sequence number assignment ---------------------------------------
+    def _refill(self) -> None:
+        for lid in self.lane_order():
+            self._pending.setdefault(lid, []).append(self._next_sn)
+            self._order_log.append((self._next_sn, lid))
+            self._next_sn += 1
+
+    def get_seq_no(self, lane_id: int) -> int:
+        """Next sequence number for this lane (paper's ``get-seq-no(tid)``)."""
+        while not self._pending.get(lane_id):
+            self._refill()
+        return self._pending[lane_id].pop(0)
+
+    def order_for(self, txn_lanes: Iterable[int]) -> np.ndarray:
+        """Assign sequence numbers to a whole batch of transactions given
+        the lane each one runs on; returns (K,) seq numbers (1-based)."""
+        return np.asarray([self.get_seq_no(l) for l in txn_lanes], np.int64)
+
+
+class ReplaySequencer:
+    """Feed a previously recorded commit order back in (record/replay)."""
+
+    def __init__(self, recorded_order: Iterable[int]):
+        # recorded_order[i] = txn index that committed i-th
+        self._order = list(recorded_order)
+
+    def order_for(self, txn_lanes: Iterable[int]) -> np.ndarray:
+        lanes = list(txn_lanes)
+        if len(lanes) != len(self._order):
+            raise ValueError(
+                f"replay log has {len(self._order)} transactions, "
+                f"batch has {len(lanes)}")
+        seq = np.empty(len(lanes), np.int64)
+        for pos, txn_idx in enumerate(self._order):
+            seq[txn_idx] = pos + 1
+        return seq
+
+
+class ExplicitSequencer:
+    """Explicit total order over named transactions; raises on a hang
+    (an ordered transaction that no lane ever executes, paper §2.1)."""
+
+    def __init__(self, order: Iterable[str]):
+        self._order = list(order)
+
+    def order_for(self, txn_names: Iterable[str]) -> np.ndarray:
+        names = list(txn_names)
+        missing = [n for n in self._order if n not in names]
+        if missing:
+            raise RuntimeError(
+                f"explicit order waits forever for {missing!r}; "
+                "aborting instead of hanging (paper §2.1)")
+        pos = {n: i + 1 for i, n in enumerate(self._order)}
+        extra = [n for n in names if n not in pos]
+        if extra:
+            raise RuntimeError(f"transactions not in explicit order: {extra!r}")
+        return np.asarray([pos[n] for n in names], np.int64)
+
+
+def seq_to_order(seq: np.ndarray) -> np.ndarray:
+    """(K,) 1-based sequence numbers -> (K,) permutation: order[p] = txn
+    index holding sequence position p+1."""
+    order = np.empty_like(seq)
+    order[np.argsort(seq, kind="stable")] = np.arange(len(seq))
+    return np.argsort(seq, kind="stable")

@@ -1,0 +1,67 @@
+"""Transactional object store (TStore).
+
+The TPU/JAX analog of the paper's shared mutable heap + TL2 metadata:
+
+- ``values``   (O, S) int32  — O objects, each a slot-vector of S words.
+- ``versions`` (O,)   int32  — per-object version = sequence number of the
+  last committed writer (the paper retrofits sequence numbers as TL2
+  versions, §3.1 "Speculative STM transaction"); 0 means "initial state".
+- ``gv``       ()     int32  — global version = sequence number of the last
+  committed transaction (the paper's ``gv``/``sn_c``).
+
+The store is a pure pytree threaded through ``jax.lax`` control flow; all
+engines (OCC / PCC / PoGL / DeSTM-analog) transform it functionally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TStore:
+    values: jax.Array    # (O, S) int32
+    versions: jax.Array  # (O,)   int32
+    gv: jax.Array        # ()     int32
+
+    @property
+    def n_objects(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def slot(self) -> int:
+        return self.values.shape[1]
+
+
+def make_store(n_objects: int, slot: int = 1, init=None) -> TStore:
+    """Create a fresh store. ``init`` is an optional (O, S) initial image."""
+    if init is None:
+        values = jnp.zeros((n_objects, slot), dtype=jnp.int32)
+    else:
+        values = jnp.asarray(init, dtype=jnp.int32).reshape(n_objects, -1)
+    return TStore(
+        values=values,
+        versions=jnp.zeros((n_objects,), dtype=jnp.int32),
+        gv=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def fingerprint(store: TStore) -> jax.Array:
+    """Order-sensitive FNV-1a (32-bit) fingerprint of the store image.
+
+    Used by the determinism harness: two executions are "the same outcome"
+    iff their fingerprints are bitwise equal.
+    """
+    data = store.values.astype(jnp.uint32).reshape(-1)
+
+    def step(h, x):
+        h = (h ^ x) * jnp.uint32(0x01000193)
+        return h, None
+
+    h0 = jnp.uint32(0x811C9DC5)
+    h, _ = jax.lax.scan(step, h0, data)
+    return h

@@ -1,0 +1,153 @@
+"""Transactions with *dynamic* read/write sets, as a jittable bytecode VM.
+
+The paper chooses OCC precisely because general TM transactions have
+read/write sets that cannot be known a priori (aliasing, pointer chasing,
+"the unstructured nature of the heap", §2.2).  We reproduce that property
+in a dataflow runtime with a tiny bounded-length bytecode: the *indirect*
+addressing mode makes an instruction's effective address depend on the
+value returned by the previous read, so a transaction's footprint is only
+discoverable by executing it — exactly the dynamic-set regime.
+
+Opcodes
+-------
+NOP   — padding.
+READ  — acc += M[eff]; logs eff in the read set.
+WRITE — M[eff] := acc + operand (deferred); logs eff in the write set.
+RMW   — READ then WRITE on the same address (read-modify-write).
+
+Addressing: eff = addr                     (direct)
+            eff = (addr + last_read) % O   (indirect — data dependent)
+
+Reads observe the transaction's own deferred writes (read-your-writes, as
+in Fig. 2a line 5/6 of the paper: "return the buffered value for o in the
+write set, if existing").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NOP, READ, WRITE, RMW = 0, 1, 2, 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TxnBatch:
+    """K transactions of up to L instructions each (stacked, masked)."""
+
+    opcodes: jax.Array   # (K, L) int32
+    addrs: jax.Array     # (K, L) int32
+    indirect: jax.Array  # (K, L) bool
+    operands: jax.Array  # (K, L) int32
+    n_ins: jax.Array     # (K,)   int32 — live instruction count (= txn "cost")
+
+    @property
+    def n_txns(self) -> int:
+        return self.opcodes.shape[0]
+
+    @property
+    def max_ins(self) -> int:
+        return self.opcodes.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TxnResult:
+    """One speculative execution: logged footprint + deferred writes."""
+
+    raddrs: jax.Array  # (K, L) int32 — read-set addresses (first rn valid)
+    rn: jax.Array      # (K,)   int32
+    waddrs: jax.Array  # (K, L) int32 — write-set addresses (first wn valid)
+    wvals: jax.Array   # (K, L, S) int32 — deferred values (write buffer)
+    wn: jax.Array      # (K,)   int32
+
+
+def make_batch(progs: list[list[tuple]], max_ins: int | None = None) -> TxnBatch:
+    """Build a TxnBatch from python programs: each a list of
+    (opcode, addr, indirect, operand) tuples."""
+    k = len(progs)
+    length = max_ins or max((len(p) for p in progs), default=1)
+    length = max(length, 1)
+    op = np.zeros((k, length), np.int32)
+    ad = np.zeros((k, length), np.int32)
+    ind = np.zeros((k, length), bool)
+    opr = np.zeros((k, length), np.int32)
+    n = np.zeros((k,), np.int32)
+    for i, p in enumerate(progs):
+        n[i] = len(p)
+        for j, (o, a, b, v) in enumerate(p):
+            op[i, j], ad[i, j], ind[i, j], opr[i, j] = o, a, b, v
+    return TxnBatch(
+        opcodes=jnp.asarray(op), addrs=jnp.asarray(ad),
+        indirect=jnp.asarray(ind), operands=jnp.asarray(opr),
+        n_ins=jnp.asarray(n),
+    )
+
+
+def run_txn(batch_row, values: jax.Array) -> tuple:
+    """Execute ONE transaction speculatively against a store image.
+
+    ``batch_row`` — a TxnBatch pytree sliced to one transaction (arrays of
+    shape (L,) / (L,)).  ``values`` — (O, S) committed store image.  Pure:
+    returns the footprint + deferred writes, never mutates ``values``
+    (deferred-update OCC read phase, Fig. 2a).
+    """
+    n_obj, slot = values.shape
+    length = batch_row.opcodes.shape[0]
+
+    def step(carry, t):
+        acc, last, rn, wn, raddrs, waddrs, wvals = carry
+        op = batch_row.opcodes[t]
+        active = (t < batch_row.n_ins) & (op != NOP)
+        eff = jnp.where(
+            batch_row.indirect[t],
+            jnp.abs(batch_row.addrs[t] + last) % n_obj,
+            batch_row.addrs[t] % n_obj,
+        )
+        is_read = active & ((op == READ) | (op == RMW))
+        is_write = active & ((op == WRITE) | (op == RMW))
+
+        # read-your-writes: latest deferred write to eff, else memory
+        idx = jnp.arange(length)
+        match = (waddrs == eff) & (idx < wn)
+        has_match = match.any()
+        last_match = (length - 1) - jnp.argmax(match[::-1])
+        buf_val = wvals[last_match]
+        mem_val = values[eff]
+        rval = jnp.where(has_match, buf_val, mem_val)  # (S,)
+
+        acc = jnp.where(is_read, acc + rval, acc)
+        last = jnp.where(is_read, rval[0], last)
+        raddrs = jnp.where(is_read, raddrs.at[rn].set(eff), raddrs)
+        rn = rn + is_read.astype(jnp.int32)
+
+        wval = acc + batch_row.operands[t]
+        waddrs = jnp.where(is_write, waddrs.at[wn].set(eff), waddrs)
+        wvals = jnp.where(is_write, wvals.at[wn].set(wval), wvals)
+        wn = wn + is_write.astype(jnp.int32)
+        return (acc, last, rn, wn, raddrs, waddrs, wvals), None
+
+    init = (
+        jnp.zeros((slot,), jnp.int32),          # acc
+        jnp.zeros((), jnp.int32),               # last read word
+        jnp.zeros((), jnp.int32),               # rn
+        jnp.zeros((), jnp.int32),               # wn
+        jnp.zeros((length,), jnp.int32),        # raddrs
+        jnp.zeros((length,), jnp.int32),        # waddrs
+        jnp.zeros((length, slot), jnp.int32),   # wvals
+    )
+    (acc, last, rn, wn, raddrs, waddrs, wvals), _ = jax.lax.scan(
+        step, init, jnp.arange(length))
+    return raddrs, rn, waddrs, wvals, wn
+
+
+def run_all(batch: TxnBatch, values: jax.Array) -> TxnResult:
+    """Speculatively execute every transaction in the batch (vmapped) against
+    the same committed store image — one engine "round" of read phases."""
+    raddrs, rn, waddrs, wvals, wn = jax.vmap(run_txn, in_axes=(0, None))(
+        batch, values)
+    return TxnResult(raddrs=raddrs, rn=rn, waddrs=waddrs, wvals=wvals, wn=wn)

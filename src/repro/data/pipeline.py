@@ -1,0 +1,57 @@
+"""Deterministic data pipeline.
+
+Replica determinism starts at the input: every batch is a pure function
+of (seed, step, shard) — no queue timing, no host races.  The stream is
+a seeded synthetic token source (Zipf-ish unigram mixture with local
+n-gram structure so losses actually decrease) sharded by host; restart
+at step k reproduces the identical batch k (checkpoint stores only the
+step counter)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def _fold(seed, *xs) -> np.random.Generator:
+    mask = (1 << 64) - 1
+    s = int(seed) & mask
+    for x in xs:
+        s = (s * 6364136223846793005 + int(x)
+             + 1442695040888963407) & mask
+    return np.random.default_rng(s)
+
+
+def batch_at(cfg: DataConfig, step: int) -> dict:
+    """Batch for ``step`` on this host: {tokens (b, S), labels (b, S)}."""
+    assert cfg.global_batch % cfg.n_hosts == 0
+    b = cfg.global_batch // cfg.n_hosts
+    rng = _fold(cfg.seed, step, cfg.host_id)
+    # unigram zipf base
+    ranks = rng.zipf(1.3, size=(b, cfg.seq_len))
+    tokens = np.minimum(ranks - 1, cfg.vocab - 1).astype(np.int32)
+    # inject learnable bigram structure: even positions predict +1
+    tokens[:, 1::2] = (tokens[:, 0::2] + 1) % cfg.vocab
+    labels = np.concatenate(
+        [tokens[:, 1:], np.full((b, 1), -1, np.int32)], axis=1)
+    return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+
+
+def stream(cfg: DataConfig, start_step: int = 0):
+    step = start_step
+    while True:
+        yield step, batch_at(cfg, step)
+        step += 1

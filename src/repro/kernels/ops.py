@@ -1,0 +1,78 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding/reshaping so callers can pass arbitrary shapes; pick
+interpret mode automatically (interpret=True off-TPU so the kernels
+validate on CPU; compiled on real TPU backends).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adamw as _adamw
+from repro.kernels import kv_commit as _kvc
+from repro.kernels import validate as _val
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def validate(read_addrs: jax.Array, read_n: jax.Array,
+             written_addrs: jax.Array, written_n: jax.Array,
+             n_objects: int) -> jax.Array:
+    """Read-set validation for K transactions against a written set.
+
+    read_addrs (K, L) + read_n (K,); written_addrs (Lw,) + written_n ().
+    Returns conflict (K,) bool.
+    """
+    k = read_addrs.shape[0]
+    read_bits = _val.pack_addr_sets(read_addrs, read_n, n_objects)
+    written_bits = _val.pack_addr_sets(
+        written_addrs[None, :], written_n[None], n_objects)[0]
+    read_bits = _pad_to(_pad_to(read_bits, _val.BK, 0), _val.BW, 1)
+    written_bits = _pad_to(written_bits, _val.BW, 0)
+    out = _val.validate_bitsets(read_bits, written_bits,
+                                interpret=not _on_tpu())
+    return out[:k]
+
+
+def adamw_update(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999,
+                 eps=1e-8, wd=0.01):
+    """Fast-mode fused AdamW over an arbitrary-shaped parameter leaf."""
+    shape = p.shape
+    flat = lambda x: _pad_to(x.reshape(1, -1).astype(jnp.float32),
+                             _adamw.BR * _adamw.BC, 1).reshape(
+                                 _adamw.BR, -1)
+    p2, m2, v2 = _adamw.fused_adamw(
+        flat(p), flat(m), flat(v), flat(g), step=step, lr=lr, b1=b1,
+        b2=b2, eps=eps, wd=wd, interpret=not _on_tpu())
+    n = int(jnp.prod(jnp.asarray(shape)))
+    unflat = lambda x: x.reshape(-1)[:n].reshape(shape)
+    return unflat(p2), unflat(m2), unflat(v2)
+
+
+def adamw_update_speculative(p, m, v, g, versions, rv, *, step, lr=1e-3,
+                             b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    """Speculative fused AdamW: versions (R//BR, C//BC) int32, rv scalar."""
+    return _adamw.fused_adamw_speculative(
+        p, m, v, g, versions, rv, step=step, lr=lr, b1=b1, b2=b2,
+        eps=eps, wd=wd, interpret=not _on_tpu())
+
+
+def kv_cache_commit(cache, versions, rows, page_idx, row_idx, sn, commit):
+    """Ordered paged-KV commit for one decode step (see kv_commit.py)."""
+    return _kvc.kv_commit(cache, versions, rows, page_idx, row_idx, sn,
+                          commit, interpret=not _on_tpu())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def validate_bitsets_ref(read_bits: jax.Array,
+                         written_bits: jax.Array) -> jax.Array:
+    """conflict (K,) bool."""
+    hit = (read_bits & written_bits[None, :]) != 0
+    return hit.any(axis=1)
+
+
+def adamw_ref(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
+              wd=0.01):
+    g = g.astype(jnp.float32)
+    step = jnp.asarray(step, jnp.float32)
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    bc1 = 1.0 - jnp.power(jnp.float32(b1), step)
+    bc2 = 1.0 - jnp.power(jnp.float32(b2), step)
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2
+
+
+def adamw_speculative_ref(p, m, v, g, versions, rv, *, step, lr=1e-3,
+                          b1=0.9, b2=0.999, eps=1e-8, wd=0.01,
+                          br=256, bc=256):
+    """Per-(br, bc)-block validated update; stale blocks abort."""
+    p2, m2, v2 = adamw_ref(p, m, v, g, step=step, lr=lr, b1=b1, b2=b2,
+                           eps=eps, wd=wd)
+    stale = versions > rv                                  # (gr, gc) bool
+    big = jnp.repeat(jnp.repeat(stale, br, axis=0), bc, axis=1)
+    return (jnp.where(big, p, p2), jnp.where(big, m, m2),
+            jnp.where(big, v, v2), stale.astype(jnp.int32))
+
+
+def kv_commit_ref(cache, versions, rows, page_idx, row_idx, sn, commit):
+    """Sequential slot commits in grid order (commit order)."""
+    def body(i, carry):
+        cache, versions = carry
+        do = commit[i] != 0
+        page = cache[page_idx[i]]
+        updated = jax.lax.dynamic_update_slice(
+            page, rows[i][None].astype(cache.dtype), (row_idx[i], 0))
+        cache = cache.at[page_idx[i]].set(jnp.where(do, updated, page))
+        versions = versions.at[page_idx[i]].set(
+            jnp.where(do, sn[i], versions[page_idx[i]]))
+        return cache, versions
+
+    return jax.lax.fori_loop(0, rows.shape[0], body, (cache, versions))

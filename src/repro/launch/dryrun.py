@@ -1,0 +1,509 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run (DESIGN.md §6, the brief's deliverable (e)).
+#
+# For every (architecture × input shape) cell this lowers + compiles the
+# real step function on the production mesh — (16, 16) single-pod and
+# (2, 16, 16) multi-pod — recording memory_analysis() (fit proof),
+# cost_analysis() (FLOPs/bytes) and the collective schedule parsed from
+# the compiled HLO.
+#
+# Because XLA's cost analysis counts loop bodies ONCE (scan-over-layers
+# would hide (L-1)/L of the FLOPs), each cell additionally lowers an
+# UNROLLED analysis pair at trunk depths g and 2g (g = pattern-group
+# size); the delta is the exact marginal cost of one group, and
+#     total = cost(g) + (n_groups - 1 + tail/g) * delta
+# extrapolates FLOPs / bytes / collective bytes for the full depth.
+# The full-depth scanned compile remains the memory-fit proof.
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, LONG_OK, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.runtime.shardings import Profile
+from repro.train import make_train_step
+from repro.train.train_step import TrainState
+
+# ---- TPU v5e-class hardware constants (roofline) ----
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------- helpers
+def _norm_spec(spec, ndim):
+    t = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return t
+
+
+def opt_specs(pspecs, pshapes, optimizer):
+    if optimizer == "adamw":
+        return {"m": pspecs, "v": pspecs, "step": P()}
+
+    def leaf(spec, shape):
+        nd = len(shape.shape)
+        t = _norm_spec(spec, nd)
+        if nd >= 2:
+            return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))}
+        return {"v": spec}
+
+    return {"stats": jax.tree.map(
+        leaf, pspecs, pshapes,
+        is_leaf=lambda s: isinstance(s, P)), "step": P()}
+
+
+def profile_for(mesh, shape_spec) -> Profile:
+    axes = mesh.axis_names
+    data_axes = ("pod", "data") if "pod" in axes else ("data",)
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes]))
+    replicated = shape_spec.global_batch % n_data != 0
+    return Profile(data_axes=data_axes, model_axis="model",
+                   replicated_batch=replicated, mesh=mesh)
+
+
+def choose_optimizer(cfg: ModelConfig) -> str:
+    return "adafactor" if cfg.param_count() > 100e9 else "adamw"
+
+
+def choose_chunk(cfg: ModelConfig, seq_len: int) -> int:
+    # q-chunked attention for long global-attention sequences
+    return 2048 if seq_len > 8192 and any(
+        k == "attn" for k in cfg.pattern + cfg.tail_pattern) else 0
+
+
+def choose_microbatches(cfg: ModelConfig, shape, n_data: int = 16) -> int:
+    if shape.mode != "train":
+        return 1
+    n = cfg.param_count()
+    cap = max(1, shape.global_batch // n_data)  # keep B_mb >= data shards
+    if n > 100e9:
+        return min(8, cap)
+    if n > 18e9:
+        return min(8, cap)
+    if n > 8e9:
+        return min(4, cap)
+    return 1
+
+
+# ------------------------------------------------------- cell functions
+def make_inputs(cfg: ModelConfig, shape, mesh, prof, *, mode,
+                n_groups=None):
+    """Abstract (ShapeDtypeStruct) inputs + their NamedShardings."""
+    b, s = shape.global_batch, shape.seq_len
+    da = prof.da
+    ns = lambda spec: NamedSharding(mesh, spec)
+    model_size = mesh.shape["model"]
+
+    s_text = s - (cfg.n_patches or 0)
+    batch_specs, batch_abs = {}, {}
+
+    def add(name, shp, dtype, spec):
+        batch_abs[name] = jax.ShapeDtypeStruct(shp, dtype)
+        batch_specs[name] = ns(spec)
+
+    if mode == "train":
+        add("tokens", (b, s_text), jnp.int32, P(da, None))
+        add("labels", (b, s_text), jnp.int32, P(da, None))
+        if cfg.encoder_layers:
+            add("frames", (b, cfg.n_frames, cfg.d_model), BF16,
+                P(da, None, None))
+        if cfg.n_patches:
+            add("patches", (b, cfg.n_patches, cfg.d_model), BF16,
+                P(da, None, None))
+        return batch_abs, batch_specs
+    if mode == "prefill":
+        add("tokens", (b, s_text), jnp.int32, P(da, None))
+        if cfg.encoder_layers:
+            add("frames", (b, cfg.n_frames, cfg.d_model), BF16,
+                P(da, None, None))
+        if cfg.n_patches:
+            add("patches", (b, cfg.n_patches, cfg.d_model), BF16,
+                P(da, None, None))
+        return batch_abs, batch_specs
+    # decode: tokens + pos + cache
+    add("tokens", (b, 1), jnp.int32, P(da, None))
+    add("pos", (b,), jnp.int32, P(da))
+    cache_abs = jax.eval_shape(
+        lambda: lm.init_cache(cfg, b, s, prof, n_groups=n_groups,
+                              dtype=_cache_dtype(cfg)))
+    cspecs = lm.cache_specs(cfg, prof, model_size)
+    if n_groups is not None and "tail" in cspecs:
+        del cspecs["tail"]
+    cache_shardings = jax.tree.map(ns, cspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return batch_abs, batch_specs, cache_abs, cache_shardings
+
+
+def input_specs(arch: str, shape_name: str = "train_4k",
+                multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (the
+    brief's input_specs(): weak-type-correct, shardable, no allocation).
+    Returns (abstract_inputs, shardings[, cache_abstract, cache_shardings
+    for decode])."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    prof = profile_for(mesh, shape)
+    return make_inputs(cfg, shape, mesh, prof, mode=shape.mode)
+
+
+def _cache_dtype(cfg: ModelConfig):
+    # fp8 KV cache for MHA-at-32k archs whose bf16 cache exceeds HBM
+    # (qwen1.5-32b: 40 kv heads x 64L x 32k x 128b = 21 GB/chip in bf16).
+    if cfg.n_kv_heads * cfg.hd * cfg.n_layers >= 64 * 40 * 128:
+        return jnp.float8_e4m3fn
+    return BF16
+
+
+
+
+# -------------------------------------------------------- HLO analysis
+COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+SHAPE_RE = re.compile(r"(f32|bf16|f16|f8e4m3fn|f8e5m2|s32|u32|s8|u8|pred|"
+                      r"f64|s64|u64|c64)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s32": 4, "u32": 4, "s8": 1, "u8": 1, "pred": 1, "f64": 8,
+               "s64": 8, "u64": 8, "c64": 8}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Wire-byte estimate per collective type: result-shape bytes of every
+    collective op (×2 for all-reduce ring cost).
+
+    ``total_bf16_wire`` additionally halves f32 collectives: XLA:CPU's
+    float normalization upcasts ALL bf16 math to f32 before SPMD
+    materialization (verified with a pure-bf16 minimal repro), so f32
+    wire bytes measured here are bf16 on a real TPU lowering.  JAX
+    cotangents of bf16 primals are bf16, so backward collectives are
+    covered; our deliberately-f32 values (grad accumulator, optimizer
+    state) never cross the wire themselves."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "ops": 0}
+    f32_bytes = 0
+    for line in hlo.splitlines():
+        m = COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).lower()
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(
+            m.group(1))[0]
+        nbytes = _shape_bytes(lhs)
+        factor = 2 if kind == "all-reduce" else 1
+        out[kind] += nbytes * factor
+        shapes = SHAPE_RE.findall(lhs)
+        if shapes and all(dt == "f32" for dt, _ in shapes):
+            f32_bytes += nbytes * factor
+        out["ops"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("ops", "total"))
+    out["total_bf16_wire"] = out["total"] - f32_bytes // 2
+    return out
+
+
+def summarize(compiled, n_chips: int) -> dict:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            # peak: aliased outputs share the argument buffers (donation)
+            "peak_bytes": int(mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              - mem.alias_size_in_bytes
+                              + mem.temp_size_in_bytes),
+        },
+        "n_chips": n_chips,
+    }
+
+# ------------------------------------------------------------ cell build
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               n_groups=None, unroll=False, train_mode="pot",
+               verbose=True, profile_patch=None, n_mb_override=None,
+               cfg_patch=None, force_huge=False):
+    """Lower + compile one cell; return (compiled, meta)."""
+    cfg = get_config(arch)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    prof = profile_for(mesh, shape)
+    if profile_patch:
+        prof = dataclasses.replace(prof, **profile_patch)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    optimizer = choose_optimizer(cfg)
+    chunk = choose_chunk(cfg, shape.seq_len)
+    n_data = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                          if a != "model"]))
+    n_mb = 1 if (n_groups is not None) else (
+        n_mb_override or choose_microbatches(cfg, shape, n_data))
+    mode_name = train_mode if n_groups is None else "baseline"
+
+    pspecs = lm.param_specs(cfg, prof, include_tail=n_groups is None)
+    params_abs = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg,
+                               n_groups=n_groups))
+    pshard = jax.tree.map(ns, pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    with jax.set_mesh(mesh):
+        if shape.mode == "train":
+            # >100B params: bf16 master params + bf16 grad accumulation
+            # (f32 adafactor stats) — the standard memory budget at this
+            # scale; <=100B trains f32 masters.
+            huge = force_huge or cfg.param_count() > 100e9
+            if huge:
+                params_abs = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        x.shape, BF16 if x.dtype == F32 else x.dtype),
+                    params_abs)
+            ospecs = opt_specs(pspecs, params_abs, optimizer)
+            oshard = jax.tree.map(ns, ospecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+            state_abs = TrainState(
+                params=params_abs,
+                opt=jax.eval_shape(
+                    lambda p: (adamw_init(p) if optimizer == "adamw"
+                               else adafactor_init(p)), params_abs),
+                gv=jax.ShapeDtypeStruct((), jnp.int32),
+                step=jax.ShapeDtypeStruct((), jnp.int32))
+            state_shard = TrainState(params=pshard, opt=oshard,
+                                     gv=ns(P()), step=ns(P()))
+            batch_abs, batch_shard = make_inputs(
+                cfg, shape, mesh, prof, mode="train")
+            step = make_train_step(
+                cfg, prof, optimizer=optimizer, mode=mode_name,
+                n_microbatches=n_mb, chunk=chunk, unroll=unroll,
+                remat=True, grad_specs=pspecs,
+                accum_dtype=BF16 if huge else F32)
+            jf = jax.jit(step,
+                         in_shardings=(state_shard, batch_shard),
+                         out_shardings=(state_shard, ns(P())),
+                         donate_argnums=(0,))
+            lowered = jf.lower(state_abs, batch_abs)
+
+        elif shape.mode == "prefill":
+            params_bf = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    x.shape, BF16 if x.dtype == F32 else x.dtype),
+                params_abs)
+            batch_abs, batch_shard = make_inputs(
+                cfg, shape, mesh, prof, mode="prefill")
+            max_seq = shape.seq_len
+
+            def prefill_fn(params, batch):
+                enc = None
+                if cfg.encoder_layers:
+                    enc = lm.encode(params, batch["frames"], cfg, prof,
+                                    unroll=unroll)
+                return lm.prefill(params, batch["tokens"], cfg, prof,
+                                  max_seq=max_seq,
+                                  prefix_embeds=batch.get("patches"),
+                                  enc=enc, chunk=chunk, unroll=unroll)
+
+            jf = jax.jit(prefill_fn, in_shardings=(pshard, batch_shard))
+            lowered = jf.lower(params_bf, batch_abs)
+
+        else:  # decode
+            params_bf = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    x.shape, BF16 if x.dtype == F32 else x.dtype),
+                params_abs)
+            batch_abs, batch_shard, cache_abs, cache_shard = make_inputs(
+                cfg, shape, mesh, prof, mode="decode", n_groups=n_groups)
+
+            def decode_fn(params, cache, tokens, pos):
+                return lm.decode_step(params, cache, tokens, pos, cfg,
+                                      prof, unroll=unroll)
+
+            jf = jax.jit(
+                decode_fn,
+                in_shardings=(pshard, cache_shard,
+                              batch_shard["tokens"], batch_shard["pos"]),
+                out_shardings=(None, cache_shard),
+                donate_argnums=(1,))
+            lowered = jf.lower(params_bf, cache_abs, batch_abs["tokens"],
+                               batch_abs["pos"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        dt = time.time() - t0
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode, "optimizer": optimizer,
+        "n_microbatches": n_mb, "chunk": chunk,
+        "n_groups": n_groups, "train_mode": mode_name,
+        "compile_s": round(dt, 1), "n_chips": n_chips,
+    }
+    if verbose:
+        print(f"  compiled {arch}/{shape_name} mesh={meta['mesh']} "
+              f"groups={n_groups or 'full'} in {dt:.0f}s", flush=True)
+    return compiled, meta
+
+
+from repro.optim import adafactor_init, adamw_init  # noqa: E402
+
+
+def depth_units(cfg: ModelConfig) -> float:
+    """Number of pattern groups incl. the tail as a fraction."""
+    g = len(cfg.pattern)
+    return cfg.n_groups + len(cfg.tail_pattern) / g
+
+
+def extrapolate(s1: dict, s2: dict, units: float) -> dict:
+    """total = cost(1 group) + (units - 1) * (cost(2g) - cost(1g))."""
+    out = {}
+    for key in ("flops", "bytes"):
+        delta = s2[key] - s1[key]
+        out[key] = s1[key] + (units - 1) * delta
+    coll = {}
+    for k in s1["collectives"]:
+        delta = s2["collectives"][k] - s1["collectives"][k]
+        coll[k] = s1["collectives"][k] + (units - 1) * delta
+    out["collectives"] = coll
+    return out
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    t_c = flops / (n_chips * PEAK_FLOPS)
+    t_m = bytes_ / (n_chips * HBM_BW)
+    t_x = coll_bytes / (n_chips * ICI_BW)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bottleneck": dom,
+            "bound_s": max(t_c, t_m, t_x),
+            "roofline_fraction": (t_c / max(t_c, t_m, t_x, 1e-30))}
+
+
+def run_cell(arch: str, shape_name: str, *, with_analysis=True,
+             with_multipod=True, train_mode="pot", out_dir=None):
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mode": shape.mode}
+
+    # full-depth fit proof, single-pod
+    compiled, meta = lower_cell(arch, shape_name, multi_pod=False,
+                                train_mode=train_mode)
+    rec["single_pod"] = {"meta": meta, **summarize(compiled, 256)}
+    print(compiled.memory_analysis())
+    if shape.mode == "decode":
+        # the CPU backend cannot alias the donated cache through the layer
+        # loop (TPU does): temp carries ~2 unaliased cache copies.  Record
+        # the TPU-equivalent adjusted peak alongside the raw number.
+        cache_bytes = rec["single_pod"]["memory"]["argument_bytes"]
+        for key in ("single_pod",):
+            memd = rec[key]["memory"]
+            memd["adjusted_peak_bytes"] = max(
+                memd["peak_bytes"] - 2 * cache_bytes, 0)
+    del compiled
+
+    if with_multipod:
+        compiled, meta = lower_cell(arch, shape_name, multi_pod=True,
+                                    train_mode=train_mode)
+        rec["multi_pod"] = {"meta": meta, **summarize(compiled, 512)}
+        del compiled
+
+    if with_analysis:
+        c1, _ = lower_cell(arch, shape_name, multi_pod=False, n_groups=1,
+                           unroll=True, train_mode="baseline")
+        s1 = summarize(c1, 256)
+        del c1
+        c2, _ = lower_cell(arch, shape_name, multi_pod=False, n_groups=2,
+                           unroll=True, train_mode="baseline")
+        s2 = summarize(c2, 256)
+        del c2
+        units = depth_units(cfg)
+        ex = extrapolate(s1, s2, units)
+        rec["analysis"] = {"g1": s1, "g2": s2, "depth_units": units,
+                           "extrapolated": ex}
+        from repro.launch.roofline_model import terms_from_record
+        rec["roofline"] = terms_from_record(rec)
+
+    path = os.path.join(out_dir, f"{arch}__{shape_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"  -> {path}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--no-multipod", action="store_true")
+    ap.add_argument("--train-mode", default="pot",
+                    choices=["pot", "baseline"])
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch.replace("-", "_")]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    t0 = time.time()
+    done, skipped = 0, 0
+    for arch in archs:
+        for shape_name in shapes:
+            if shape_name == "long_500k" and arch not in LONG_OK:
+                print(f"SKIP {arch}/{shape_name}: full-attention arch, "
+                      "500k exceeds design envelope (DESIGN.md §5)")
+                skipped += 1
+                continue
+            print(f"[{time.time()-t0:7.0f}s] CELL {arch}/{shape_name}",
+                  flush=True)
+            run_cell(arch, shape_name,
+                     with_analysis=not args.no_analysis,
+                     with_multipod=not args.no_multipod,
+                     train_mode=args.train_mode, out_dir=args.out_dir)
+            done += 1
+    print(f"DONE: {done} cells compiled, {skipped} documented skips, "
+          f"{time.time()-t0:.0f}s total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction (multi-pod dry-run, DESIGN.md §6).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (smoke tests and benches must see 1 device)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n: int | None = None, axis: str = "data"):
+    """Small mesh over whatever devices exist (examples/tests)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,95 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+Host-scale entry point: builds the selected architecture (full or smoke
+config), the deterministic data pipeline, the Pot train step, and runs
+with periodic atomic checkpoints + deterministic resume.  On a real
+multi-host fleet the same code runs under ``jax.distributed.initialize``
+with the production mesh (launch/mesh.py); on this container it runs the
+smoke config over simulated host devices.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--mode", choices=["pot", "baseline"], default="pot")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/pot_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--xla-devices", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.xla_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.xla_devices}")
+
+    import jax
+    import numpy as np
+
+    from repro.ckpt import checkpoint as ck
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import DataConfig, batch_at
+    from repro.models import lm
+    from repro.runtime.shardings import SMOKE
+    from repro.train import make_train_step
+    from repro.train.train_step import init_state
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    if not args.smoke and cfg.param_count() > 2e9:
+        print(f"WARNING: {cfg.name} has {cfg.param_count()/1e9:.1f}B "
+              "params — full-size training needs the production mesh; "
+              "use --smoke on this host.", file=sys.stderr)
+
+    print(f"arch={cfg.name} params={cfg.param_count():,} mode={args.mode}")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(params)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    step_fn = jax.jit(make_train_step(
+        cfg, SMOKE, mode=args.mode, n_microbatches=args.microbatches,
+        remat=False, lr=args.lr))
+
+    start = 0
+    if args.resume and (last := ck.latest_step(args.ckpt_dir)) is not None:
+        state, extra = ck.restore(args.ckpt_dir, last, state)
+        start = extra["data_step"]
+        print(f"resumed at step {start} (gv={int(state.gv)})")
+
+    for i in range(start, args.steps):
+        # whisper/internvl stub frontends: synthesize embeddings
+        batch = dict(batch_at(dcfg, i))
+        if cfg.encoder_layers:
+            batch["frames"] = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(7), i),
+                (args.batch, cfg.n_frames, cfg.d_model))
+        if cfg.n_patches:
+            batch["patches"] = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(8), i),
+                (args.batch, cfg.n_patches, cfg.d_model))
+        state, loss = step_fn(state, batch)
+        if (i + 1) % 10 == 0 or i == start:
+            print(f"step {i+1:4d}  loss {float(loss):.4f}  "
+                  f"gv {int(state.gv)}", flush=True)
+        if (i + 1) % args.ckpt_every == 0:
+            ck.save(args.ckpt_dir, i + 1, state,
+                    extra={"data_step": i + 1})
+            ck.prune(args.ckpt_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

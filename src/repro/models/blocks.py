@@ -1,0 +1,351 @@
+"""Layer primitives shared by all assigned architectures.
+
+Conventions:
+- parameters are stored f32, cast to bf16 at use; softmax / norms / gates
+  accumulate in f32.
+- every apply function takes ``unroll``: when True, inner sequence loops
+  (q-chunk attention, SSD chunk scan) run as python loops instead of
+  ``lax.scan`` so the analysis lowerings expose their full FLOP count to
+  ``cost_analysis()`` (which counts while-loop bodies only once — see
+  DESIGN.md §7); the full-depth compiles use scans for compact HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.runtime.shardings import Profile, cons
+
+C = jnp.bfloat16  # compute dtype
+
+
+def _cast(p):
+    return jax.tree.map(lambda a: a.astype(C) if a.dtype == jnp.float32 else a, p)
+
+
+# --------------------------------------------------------------- norms/rope
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(C) * scale.astype(C)
+
+
+def rope_tables(positions, head_dim, theta):
+    """positions (...,) int32 -> (…, head_dim/2) sin/cos tables."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x (B, S, ..., hd); sin/cos (B, S, hd/2) broadcast over head axes."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    while sin.ndim < x.ndim:
+        sin, cos = sin[..., None, :], cos[..., None, :]
+    sin, cos = sin.astype(jnp.float32), cos.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+NEG = -1e30
+
+
+def _repeat_kv(k, g):
+    """(B, S, KV, hd) -> (B, S, KV*g, hd): expand grouped KV to full heads
+    for the train/prefill paths so scores shard cleanly over a flat head
+    dim (decode keeps the grouped form — its footprint is tiny)."""
+    if g == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None], (b, s, kv, g, hd)).reshape(
+        b, s, kv * g, hd)
+
+
+def _sdpa_flat(q, k, v, mask, prof):
+    """q (B,Q,H,hd), k/v (B,S,H,hd), mask (B,Q,S) or (Q,S) bool.
+    Scores are explicitly head-sharded over the model axis (TP)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = cons(scores, jax.sharding.PartitionSpec(
+        prof.da, prof.ma, None, None), prof)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, NEG)   # (B,1,Q,S) broadcast
+    probs = jax.nn.softmax(scores, axis=-1).astype(C)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return cons(out, jax.sharding.PartitionSpec(
+        prof.da, None, prof.ma, None), prof)
+
+
+def _sdpa(q, k, v, mask):
+    """Grouped decode attention: q (B,Q,KV,G,hd), k/v (B,S,KV,hd),
+    mask (B,Q,S) bool."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:
+        mask = mask[:, None, None]  # (B,1,1,Q,S)
+    scores = jnp.where(mask, scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(C)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def attend_full(q, k, v, q_pos, kv_pos, prof, *, causal=True, window=0,
+                chunk=0, unroll=False):
+    """Exact attention; q (B,Q,H,hd) vs k/v (B,S,H,hd) (kv pre-repeated).
+
+    q_pos (B, Q) / kv_pos (B, S) absolute positions for masking.
+    chunk>0: iterate over q chunks (bounded memory); window>0: each query
+    attends to keys in (pos-window, pos].
+    """
+    def mask_for(qp, kp):
+        m = kp[:, None, :] <= qp[:, :, None] if causal else \
+            jnp.ones((qp.shape[0], qp.shape[1], kp.shape[1]), bool)
+        if window:
+            m &= kp[:, None, :] > (qp[:, :, None] - window)
+        return m
+
+    if not chunk or q.shape[1] <= chunk:
+        return _sdpa_flat(q, k, v, mask_for(q_pos, kv_pos), prof)
+
+    nq = q.shape[1] // chunk
+    assert q.shape[1] % chunk == 0
+
+    def one(i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, 1)
+        return _sdpa_flat(sl(q), k, v, mask_for(sl(q_pos), kv_pos), prof)
+
+    if unroll:
+        outs = [one(i) for i in range(nq)]
+        return jnp.concatenate(outs, axis=1)
+    outs = jax.lax.map(one, jnp.arange(nq))          # (nq, B, chunk, ...)
+    return jnp.moveaxis(outs, 0, 1).reshape(q.shape)
+
+
+def attend_window_banded(q, k, v, prof, *, window):
+    """Sub-quadratic sliding-window attention (training/prefill):
+    chunk the sequence by ``window``; each q chunk attends to (prev, self)
+    kv chunks with an in-band causal mask.  FLOPs = 2·S·window per head
+    pair instead of S² (local layers of gemma3 / recurrentgemma).
+    q/k/v (B, S, H, hd) flat-head."""
+    b, s, h, hd = q.shape
+    w = window
+    assert s % w == 0, (s, w)
+    nc = s // w
+    qc = q.reshape(b, nc, w, h, hd)
+    kc = k.reshape(b, nc, w, h, hd)
+    vc = v.reshape(b, nc, w, h, hd)
+    # previous chunk (zero for the first)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kp, kc], axis=2)           # (b, nc, 2w, h, hd)
+    v2 = jnp.concatenate([vp, vc], axis=2)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bnqhd,bnshd->bnhqs", qc, k2,
+                        preferred_element_type=jnp.float32) * scale
+    scores = cons(scores, jax.sharding.PartitionSpec(
+        prof.da, None, prof.ma, None, None), prof)
+    qpos = jnp.arange(w)[:, None] + w                # within 2w frame
+    kpos = jnp.arange(2 * w)[None, :]
+    m = (kpos <= qpos) & (kpos > qpos - w)
+    first = jnp.arange(nc) == 0                      # first chunk: no prev
+    m_first = m & (kpos >= w)
+    mask = jnp.where(first[:, None, None], m_first[None], m[None])
+    scores = jnp.where(mask[None, :, None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(C)
+    out = jnp.einsum("bnhqs,bnshd->bnqhd", probs, v2)
+    return out.reshape(b, s, h, hd)
+
+
+def init_attn(key, cfg: ModelConfig, cross=False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), jnp.float32) * std,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), jnp.float32) * std,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), jnp.float32) * std,
+        "wo": jax.random.normal(ks[3], (h * hd, d), jnp.float32) * std,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    return p
+
+
+def attn_specs(cfg: ModelConfig, prof: Profile, cross=False):
+    p = {"wq": prof.w_in(), "wk": prof.w_in(), "wv": prof.w_in(),
+         "wo": prof.w_out()}
+    if cfg.qkv_bias and not cross:
+        p.update(bq=prof.bias_ff(), bk=prof.bias_ff(), bv=prof.bias_ff())
+    return p
+
+
+def attn_apply(p, x, cfg: ModelConfig, prof: Profile, *, kind="attn",
+               causal=True, positions=None, kv_src=None, kv_positions=None,
+               chunk=0, unroll=False, use_rope=True, return_kv=False):
+    """Full-sequence attention (train / prefill).  kv_src: cross-attention
+    source (B, S_kv, D); defaults to x (self-attention).
+    return_kv: also return (k, v) post-RoPE — the decode cache rows."""
+    p = _cast(p)
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_src is None else kv_src
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = cons(q, prof.act_bthd(), prof).reshape(b, s, h, hd)
+    k = k.reshape(b, src.shape[1], kv, hd)
+    v = v.reshape(b, src.shape[1], kv, hd)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if kv_positions is None:
+        kv_positions = positions if kv_src is None else jnp.broadcast_to(
+            jnp.arange(src.shape[1])[None], (b, src.shape[1]))
+    if use_rope:
+        sin_q, cos_q = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin_q, cos_q)
+        sin_k, cos_k = rope_tables(kv_positions, hd, cfg.rope_theta)
+        k = apply_rope(k, sin_k, cos_k)
+    k_rep = _repeat_kv(k, h // kv)
+    v_rep = _repeat_kv(v, h // kv)
+    if (kind == "local" and causal and cfg.window and s > cfg.window
+            and s % cfg.window == 0):
+        out = attend_window_banded(q, k_rep, v_rep, prof, window=cfg.window)
+    else:
+        win = cfg.window if kind == "local" else 0
+        out = attend_full(q, k_rep, v_rep, positions, kv_positions, prof,
+                          causal=causal, window=win, chunk=chunk,
+                          unroll=unroll)
+    out = out.reshape(b, s, h * hd)
+    out = out @ p["wo"]
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def _decode_attend_chunked(q, cache_k, cache_v, mask, chunk=2048):
+    """Online-softmax decode attention over a long cache, one chunk at a
+    time — the bf16 upcast of a quantized/large cache never materializes
+    more than ``chunk`` positions (flash-decoding structure).
+
+    q (B,1,KV,G,hd); cache (B,S,KV,hd) any dtype; mask (B,S) bool."""
+    b, _, kv, g, hd = q.shape
+    smax = cache_k.shape[1]
+    nch = -(-smax // chunk)
+    scale = hd ** -0.5
+    q0 = q[:, 0].astype(jnp.float32)                       # (B,KV,G,hd)
+
+    def body(i, carry):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(
+            cache_k, i * chunk, chunk, 1).astype(jnp.float32)
+        vs = jax.lax.dynamic_slice_in_dim(
+            cache_v, i * chunk, chunk, 1).astype(jnp.float32)
+        msk = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+        s = jnp.einsum("bkgd,bskd->bkgs", q0, ks) * scale  # (B,KV,G,c)
+        s = jnp.where(msk[:, None, None, :], s, NEG)
+        m2 = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m2)
+        pr = jnp.exp(s - m2[..., None])
+        l2 = l * corr + pr.sum(-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "bkgs,bskd->bkgd", pr, vs)
+        return m2, l2, acc2
+
+    init = (jnp.full((b, kv, g), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kv, g), jnp.float32),
+            jnp.zeros((b, kv, g, hd), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, nch, body, init)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out[:, None].astype(C)                          # (B,1,KV,G,hd)
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                prof: Profile, *, kind="attn", cross=False, use_rope=True):
+    """One-token decode.  x (B, 1, D); cache_k/v (B, Smax, KV, hd);
+    pos (B,) current position.  Returns (out, new_k, new_v)."""
+    p = _cast(p)
+    b, _, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, kv, h // kv, hd)
+    if use_rope:
+        sin, cos = rope_tables(pos[:, None], hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+    if not cross:
+        knew = x @ p["wk"]
+        vnew = x @ p["wv"]
+        if "bk" in p:
+            knew, vnew = knew + p["bk"], vnew + p["bv"]
+        knew = knew.reshape(b, 1, kv, hd)
+        vnew = vnew.reshape(b, 1, kv, hd)
+        if use_rope:
+            knew = apply_rope(knew, sin, cos)
+        # scatter the new row at pos (per batch element); .at[].set keeps
+        # the donated cache buffer aliasable (a `where` copy would not)
+        idx_b = jnp.arange(b)
+        cache_k = cache_k.at[idx_b, pos].set(
+            knew[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[idx_b, pos].set(
+            vnew[:, 0].astype(cache_v.dtype))
+    smax = cache_k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(smax)[None], (b, smax))
+    mask = kv_pos <= pos[:, None] if not cross else jnp.ones_like(kv_pos,
+                                                                  bool)
+    if kind == "local" and cfg.window:
+        mask &= kv_pos > (pos[:, None] - cfg.window)
+    if smax > 8192:
+        out = _decode_attend_chunked(q, cache_k, cache_v, mask)
+    else:
+        out = _sdpa(q, cache_k.astype(C), cache_v.astype(C), mask[:, None])
+    out = out.reshape(b, 1, h * hd) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    if cfg.mlp == "swiglu":
+        return {"w1": jax.random.normal(ks[0], (d, f), jnp.float32) * std,
+                "w3": jax.random.normal(ks[1], (d, f), jnp.float32) * std,
+                "w2": jax.random.normal(ks[2], (f, d), jnp.float32) * std}
+    return {"w1": jax.random.normal(ks[0], (d, f), jnp.float32) * std,
+            "w2": jax.random.normal(ks[2], (f, d), jnp.float32) * std}
+
+
+def mlp_specs(cfg: ModelConfig, prof: Profile):
+    if cfg.mlp == "swiglu":
+        return {"w1": prof.w_in(), "w3": prof.w_in(), "w2": prof.w_out()}
+    return {"w1": prof.w_in(), "w2": prof.w_out()}
+
+
+def mlp_apply(p, x, cfg: ModelConfig, prof: Profile):
+    p = _cast(p)
+    if "w3" in p:
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"])
+    h = cons(h, prof.act_btf(), prof)
+    return h @ p["w2"]

@@ -1,0 +1,519 @@
+"""LM assembly: all 10 assigned architectures from one composable builder.
+
+Layers are organized in *pattern groups* (e.g. gemma3 = 5 local + 1 global
+per group; recurrentgemma = 2 RG-LRU + 1 local).  Parameters are stacked
+per group-slot with a leading (n_groups,) dim and the trunk is a
+``lax.scan`` over groups (compact HLO, fast multi-cell compiles) with
+``jax.checkpoint`` for training.  ``unroll=True`` switches to a python
+loop so analysis lowerings expose per-layer FLOPs (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, moe, rglru, ssm
+from repro.models.blocks import C, _cast, rmsnorm
+from repro.models.config import ModelConfig
+from repro.runtime.shardings import SMOKE, Profile, cons
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------------ params
+def _slot_init(key, kind, cfg: ModelConfig, cross: bool):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "local"):
+        p["attn"] = blocks.init_attn(ks[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru.init_rglru(ks[0], cfg)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["xattn"] = blocks.init_attn(ks[1], cfg, cross=True)
+    if kind != "mamba" and cfg.mlp != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.n_experts:
+            p["moe"] = moe.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = blocks.init_mlp(ks[2], cfg)
+    return p
+
+
+def _slot_specs(kind, cfg: ModelConfig, prof: Profile, cross: bool):
+    p = {"ln1": prof.vector()}
+    if kind in ("attn", "local"):
+        p["attn"] = blocks.attn_specs(cfg, prof)
+    elif kind == "mamba":
+        p["mixer"] = ssm.mamba_specs(cfg, prof)
+    elif kind == "rglru":
+        p["mixer"] = rglru.rglru_specs(cfg, prof)
+    if cross:
+        p["ln_x"] = prof.vector()
+        p["xattn"] = blocks.attn_specs(cfg, prof, cross=True)
+    if kind != "mamba" and cfg.mlp != "none":
+        p["ln2"] = prof.vector()
+        p["moe" if cfg.n_experts else "mlp"] = (
+            moe.moe_specs(cfg, prof) if cfg.n_experts
+            else blocks.mlp_specs(cfg, prof))
+    return p
+
+
+def init_params(key, cfg: ModelConfig, n_groups: int | None = None):
+    """Stacked parameters; pass n_groups to build a truncated trunk for
+    analysis lowerings."""
+    g = n_groups if n_groups is not None else cfg.n_groups
+    keys = jax.random.split(key, 8)
+    cross = cfg.encoder_layers > 0
+    params = {
+        "embed": jax.random.normal(
+            keys[0], (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.padded_vocab), jnp.float32) * 0.02
+
+    def stack(fn, key, n):
+        return jax.vmap(lambda k: fn(k))(jax.random.split(key, n))
+
+    params["layers"] = {
+        str(i): stack(lambda k, kind=kind: _slot_init(k, kind, cfg, cross),
+                      jax.random.fold_in(keys[2], i), g)
+        for i, kind in enumerate(cfg.pattern)
+    }
+    if cfg.tail_pattern and n_groups is None:
+        params["tail"] = {
+            str(i): _slot_init(jax.random.fold_in(keys[4], i), kind, cfg,
+                               cross)
+            for i, kind in enumerate(cfg.tail_pattern)
+        }
+    if cfg.encoder_layers:
+        params["enc_layers"] = stack(
+            lambda k: _slot_init(k, "attn", cfg, cross=False),
+            keys[3], cfg.encoder_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+def param_specs(cfg: ModelConfig, prof: Profile, include_tail: bool = True):
+    cross = cfg.encoder_layers > 0
+
+    def lead(spec_tree):  # prepend None for the stacked group dim
+        return jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), spec_tree,
+            is_leaf=lambda s: isinstance(s, P))
+
+    specs = {
+        "embed": prof.embed(),
+        "final_norm": prof.vector(),
+        "layers": {
+            str(i): lead(_slot_specs(kind, cfg, prof, cross))
+            for i, kind in enumerate(cfg.pattern)
+        },
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = prof.head()
+    if cfg.tail_pattern and include_tail:
+        specs["tail"] = {
+            str(i): _slot_specs(kind, cfg, prof, cross)
+            for i, kind in enumerate(cfg.tail_pattern)
+        }
+    if cfg.encoder_layers:
+        specs["enc_layers"] = lead(_slot_specs("attn", cfg, prof, False))
+        specs["enc_norm"] = prof.vector()
+    return specs
+
+
+# ----------------------------------------------------------------- forward
+def _ring_gather(k, v, window):
+    """Arrange the last ``window`` rows of (B, S, KV, hd) into ring order
+    (slot r holds the row whose absolute position p satisfies
+    p % window == r) — the layout decode_step's local path expects."""
+    s = k.shape[1]
+    w = min(window, s)
+    r = jnp.arange(w)
+    abs_pos = (s - 1) - ((s - 1 - r) % window)
+    return jnp.take(k, abs_pos, axis=1), jnp.take(v, abs_pos, axis=1)
+
+
+def _sublayer(pslot, kind, x, cfg, prof, *, positions, enc=None, causal=True,
+              chunk=0, unroll=False, collect=False, max_seq=0):
+    new_c = None
+    xg = cons(x, prof.act_gathered(), prof, barrier=True)
+    h = rmsnorm(xg, pslot["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        out = blocks.attn_apply(pslot["attn"], h, cfg, prof, kind=kind,
+                                causal=causal, positions=positions,
+                                chunk=chunk, unroll=unroll,
+                                return_kv=collect)
+        if collect:
+            h, k, v = out
+            if kind == "local":
+                k, v = _ring_gather(k, v, cfg.window or k.shape[1])
+            elif max_seq > k.shape[1]:
+                pad = max_seq - k.shape[1]
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_c = {"k": k, "v": v}
+        else:
+            h = out
+        h = cons(h, prof.act_btd(), prof)
+    elif kind == "mamba":
+        out = ssm.mamba_apply(pslot["mixer"], h, cfg, prof,
+                              return_state=collect)
+        h, new_c = out if collect else (out, None)
+    elif kind == "rglru":
+        out = rglru.rglru_apply(pslot["mixer"], h, cfg, prof,
+                                return_state=collect)
+        h, new_c = out if collect else (out, None)
+    x = x + cons(h, prof.act_btd(), prof, barrier=True)
+    if "xattn" in pslot and enc is not None:
+        xg = cons(x, prof.act_gathered(), prof, barrier=True)
+        h = rmsnorm(xg, pslot["ln_x"], cfg.norm_eps)
+        out = blocks.attn_apply(pslot["xattn"], h, cfg, prof, causal=False,
+                                positions=positions, kv_src=enc,
+                                use_rope=False, return_kv=collect)
+        if collect:
+            h, xk, xv = out
+            new_c = {"self": new_c, "xk": xk, "xv": xv}
+        else:
+            h = out
+        x = x + h
+    if "mlp" in pslot or "moe" in pslot:
+        xg = cons(x, prof.act_gathered(), prof, barrier=True)
+        h = rmsnorm(xg, pslot["ln2"], cfg.norm_eps)
+        h = (moe.moe_apply(pslot["moe"], h, cfg, prof) if "moe" in pslot
+             else blocks.mlp_apply(pslot["mlp"], h, cfg, prof))
+        x = x + cons(h, prof.act_btd(), prof, barrier=True)
+    return cons(x, prof.act_btd(), prof), new_c
+
+
+def _group_body(pgroup, x, cfg, prof, *, positions, enc, causal, chunk,
+                unroll, collect=False, max_seq=0):
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        x, new_c = _sublayer(pgroup[str(i)], kind, x, cfg, prof,
+                             positions=positions, enc=enc, causal=causal,
+                             chunk=chunk, unroll=unroll, collect=collect,
+                             max_seq=max_seq)
+        if collect:
+            caches[str(i)] = new_c
+    return x, caches
+
+
+def trunk(params, x, cfg: ModelConfig, prof: Profile, *, positions,
+          enc=None, causal=True, chunk=0, unroll=False, remat=False,
+          layers_key="layers", collect=False, max_seq=0):
+    layer_params = params[layers_key]
+    n_groups = jax.tree.leaves(layer_params)[0].shape[0]
+
+    def body(x, pgroup):
+        return _group_body(pgroup, x, cfg, prof, positions=positions,
+                           enc=enc, causal=causal, chunk=chunk,
+                           unroll=unroll, collect=collect, max_seq=max_seq)
+
+    if unroll:
+        caches = []
+        for g in range(n_groups):
+            pg = jax.tree.map(lambda a: a[g], layer_params)
+            x, cg = body(x, pg)
+            caches.append(cg)
+        if collect:
+            caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        fn = jax.checkpoint(body, policy=None) if remat else body
+        x, caches = jax.lax.scan(fn, x, layer_params)
+
+    tail_caches = {}
+    if layers_key == "layers" and "tail" in params:
+        for i, kind in enumerate(cfg.tail_pattern):
+            x, tc = _sublayer(params["tail"][str(i)], kind, x, cfg, prof,
+                              positions=positions, enc=enc, causal=causal,
+                              chunk=chunk, unroll=unroll, collect=collect,
+                              max_seq=max_seq)
+            if collect:
+                tail_caches[str(i)] = tc
+    if collect:
+        return x, (caches, tail_caches)
+    return x
+
+
+def encode(params, frames, cfg: ModelConfig, prof: Profile, *, unroll=False,
+           remat=False):
+    """Whisper encoder over stub frame embeddings (B, F, D)."""
+    b, f, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+    x = cons(frames.astype(C), prof.act_btd(), prof)
+    # encoder slots are plain attn layers stacked under "enc_layers"
+    tmp = {"layers": {"0": params["enc_layers"]}}
+    enc_cfg = dataclasses.replace(cfg, pattern=("attn",))
+    x = trunk(tmp, x, enc_cfg, prof, positions=positions, causal=False,
+              unroll=unroll, remat=remat)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig, prof: Profile, *,
+            prefix_embeds=None, enc=None, chunk=0, unroll=False,
+            remat=False):
+    """tokens (B, S_t) -> logits (B, S_total, V).
+
+    prefix_embeds: (B, Np, D) stub frontend output (vision patches),
+    prepended to the token embeddings (internvl2).
+    enc: (B, F, D) encoder output for cross-attention (whisper).
+    """
+    emb = params["embed"].astype(C)
+    x = emb[tokens]                                         # (B, S_t, D)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(C), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = cons(x, prof.act_btd(), prof)
+    x = trunk(params, x, cfg, prof, positions=positions, enc=enc,
+              causal=True, chunk=chunk, unroll=unroll, remat=remat)
+    x = rmsnorm(cons(x, prof.act_gathered(), prof),
+                params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(C)
+    logits = x @ head
+    return cons(logits, prof.act_btv(), prof)
+
+
+def prefill(params, tokens, cfg: ModelConfig, prof: Profile, *,
+            max_seq: int = 0, prefix_embeds=None, enc=None, chunk=0,
+            unroll=False):
+    """Process a full prompt; return (last-position logits, decode cache).
+
+    max_seq: cache capacity (>= prompt length; extra slots for decoding).
+    """
+    emb = params["embed"].astype(C)
+    x = emb[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(C), x], axis=1)
+    b, s, _ = x.shape
+    max_seq = max(max_seq, s)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = cons(x, prof.act_btd(), prof)
+    x, (caches, tail_caches) = trunk(
+        params, x, cfg, prof, positions=positions, enc=enc, causal=True,
+        chunk=chunk, unroll=unroll, collect=True, max_seq=max_seq)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(C)
+    logits = x @ head
+
+    # reshape collected caches into the init_cache layout
+    cache = {}
+    for i, kind in enumerate(cfg.pattern):
+        slot = caches[str(i)]
+        if isinstance(slot, dict) and "xk" in slot:
+            cache["cross_k"] = slot["xk"]
+            cache["cross_v"] = slot["xv"]
+            slot = slot["self"]
+        cache[str(i)] = slot
+    if tail_caches:
+        cache["tail"] = {
+            k: (v["self"] if isinstance(v, dict) and "xk" in v else v)
+            for k, v in tail_caches.items()}
+    return logits, cache
+
+
+# ------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, prof: Profile,
+               n_groups: int | None = None, dtype=C):
+    """Decode cache: per group-slot stacked (G, ...) arrays."""
+    g = n_groups if n_groups is not None else cfg.n_groups
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    cache = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "attn":
+            shape = (g, batch, max_seq, kv, hd)
+            cache[str(i)] = {"k": jnp.zeros(shape, dtype),
+                             "v": jnp.zeros(shape, dtype)}
+        elif kind == "local":
+            w = min(cfg.window or max_seq, max_seq)
+            shape = (g, batch, w, kv, hd)
+            cache[str(i)] = {"k": jnp.zeros(shape, dtype),
+                             "v": jnp.zeros(shape, dtype)}
+        elif kind == "mamba":
+            one = ssm.mamba_init_cache(cfg, batch, jnp.float32)
+            cache[str(i)] = jax.tree.map(
+                lambda a: jnp.zeros((g,) + a.shape, a.dtype), one)
+        elif kind == "rglru":
+            one = rglru.rglru_init_cache(cfg, batch, jnp.float32)
+            cache[str(i)] = jax.tree.map(
+                lambda a: jnp.zeros((g,) + a.shape, a.dtype), one)
+    if cfg.encoder_layers:
+        cache["cross_k"] = jnp.zeros(
+            (g, batch, cfg.n_frames, kv, hd), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    if cfg.tail_pattern and n_groups is None:
+        tail = {}
+        for i, kind in enumerate(cfg.tail_pattern):
+            if kind in ("attn", "local"):
+                s = (min(cfg.window or max_seq, max_seq)
+                     if kind == "local" else max_seq)
+                tail[str(i)] = {
+                    "k": jnp.zeros((batch, s, kv, hd), dtype),
+                    "v": jnp.zeros((batch, s, kv, hd), dtype)}
+            elif kind == "mamba":
+                tail[str(i)] = ssm.mamba_init_cache(cfg, batch, jnp.float32)
+            elif kind == "rglru":
+                tail[str(i)] = rglru.rglru_init_cache(cfg, batch,
+                                                      jnp.float32)
+        cache["tail"] = tail
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, prof: Profile, model_size: int):
+    """PartitionSpec tree matching init_cache."""
+    kvspec = prof.cache_kv(cfg.n_kv_heads, model_size)
+    full = P(*((None,) + tuple(kvspec)))
+    small = P(None, prof.da)  # recurrent states: batch-sharded
+    specs = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind in ("attn", "local"):
+            specs[str(i)] = {"k": full, "v": full}
+        elif kind == "mamba":
+            specs[str(i)] = {"state": P(None, prof.da, prof.ma, None, None),
+                             "conv": P(None, prof.da, None, None)}
+        elif kind == "rglru":
+            specs[str(i)] = {"state": P(None, prof.da, prof.ma),
+                             "conv": P(None, prof.da, None, prof.ma)}
+    if cfg.encoder_layers:
+        specs["cross_k"] = full
+        specs["cross_v"] = full
+    if cfg.tail_pattern:
+        tail = {}
+        for i, kind in enumerate(cfg.tail_pattern):
+            if kind in ("attn", "local"):
+                tail[str(i)] = {"k": kvspec, "v": kvspec}
+            elif kind == "mamba":
+                tail[str(i)] = {"state": P(prof.da, prof.ma, None, None),
+                                "conv": P(prof.da, None, None)}
+            elif kind == "rglru":
+                tail[str(i)] = {"state": P(prof.da, prof.ma),
+                                "conv": P(prof.da, None, prof.ma)}
+        specs["tail"] = tail
+    return specs
+
+
+# ------------------------------------------------------------------ decode
+def _ring_mask_positions(pos, window, cache_len):
+    """Absolute position held by each ring slot r: the largest p <= pos
+    with p % window == r (negative -> empty)."""
+    r = jnp.arange(cache_len)
+    return pos[:, None] - ((pos[:, None] - r[None]) % window)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                prof: Profile, *, unroll=False):
+    """One decode step.  tokens (B, 1) int32, pos (B,) int32 (position of
+    the new token).  Returns (logits (B, 1, V), new_cache)."""
+    emb = params["embed"].astype(C)
+    x = emb[tokens]                                          # (B, 1, D)
+    b = x.shape[0]
+
+    def slot_step(x, pslot, kind, cslot):
+        h = rmsnorm(x, pslot["ln1"], cfg.norm_eps)
+        if kind == "attn":
+            h, nk, nv = blocks.attn_decode(
+                pslot["attn"], h, cslot["k"], cslot["v"], pos, cfg, prof,
+                kind=kind)
+            new_c = {"k": nk, "v": nv}
+        elif kind == "local":
+            w = cslot["k"].shape[1]
+            slot_ids = pos % w
+            pc = _cast(pslot["attn"])
+            q = (h @ pc["wq"])
+            if "bq" in pc:
+                q = q + pc["bq"]
+            q = q.reshape(b, 1, cfg.n_kv_heads,
+                          cfg.n_heads // cfg.n_kv_heads, cfg.hd)
+            sin, cos = blocks.rope_tables(pos[:, None], cfg.hd,
+                                          cfg.rope_theta)
+            q = blocks.apply_rope(q, sin, cos)
+            knew = (h @ pc["wk"])
+            vnew = (h @ pc["wv"])
+            if "bk" in pc:
+                knew, vnew = knew + pc["bk"], vnew + pc["bv"]
+            knew = blocks.apply_rope(
+                knew.reshape(b, 1, cfg.n_kv_heads, cfg.hd), sin, cos)
+            vnew = vnew.reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+            idx_b = jnp.arange(b)
+            nk = cslot["k"].at[idx_b, slot_ids].set(
+                knew[:, 0].astype(cslot["k"].dtype))
+            nv = cslot["v"].at[idx_b, slot_ids].set(
+                vnew[:, 0].astype(cslot["v"].dtype))
+            abs_pos = _ring_mask_positions(pos, cfg.window, w)
+            mask = (abs_pos >= 0) & (abs_pos <= pos[:, None]) \
+                & (abs_pos > (pos[:, None] - cfg.window))
+            out = blocks._sdpa(q, nk.astype(C), nv.astype(C), mask[:, None])
+            h = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ pc["wo"]
+            new_c = {"k": nk, "v": nv}
+        elif kind == "mamba":
+            h, new_c = ssm.mamba_decode(pslot["mixer"], h, cslot, cfg, prof)
+        elif kind == "rglru":
+            h, new_c = rglru.rglru_decode(pslot["mixer"], h, cslot, cfg,
+                                          prof)
+        x = x + h
+        if "xattn" in pslot:
+            h = rmsnorm(x, pslot["ln_x"], cfg.norm_eps)
+            out, _, _ = blocks.attn_decode(
+                pslot["xattn"], h, cslot["xk"], cslot["xv"], pos, cfg,
+                prof, cross=True, use_rope=False)
+            x = x + out
+        if "mlp" in pslot or "moe" in pslot:
+            h = rmsnorm(x, pslot["ln2"], cfg.norm_eps)
+            h = (moe.moe_apply(pslot["moe"], h, cfg, prof)
+                 if "moe" in pslot else
+                 blocks.mlp_apply(pslot["mlp"], h, cfg, prof))
+            x = x + h
+        return x, new_c
+
+    def group_body(x, pgroup_and_cgroup):
+        pgroup, cgroup = pgroup_and_cgroup
+        new_cgroup = {}
+        for i, kind in enumerate(cfg.pattern):
+            cslot = dict(cgroup[str(i)])
+            if cfg.encoder_layers:
+                cslot["xk"] = cgroup["cross_k"]
+                cslot["xv"] = cgroup["cross_v"]
+            x, new_c = slot_step(x, pgroup[str(i)], kind, cslot)
+            new_cgroup[str(i)] = new_c
+        if cfg.encoder_layers:
+            new_cgroup["cross_k"] = cgroup["cross_k"]
+            new_cgroup["cross_v"] = cgroup["cross_v"]
+        return x, new_cgroup
+
+    layer_cache = {k: v for k, v in cache.items() if k != "tail"}
+    n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+    if unroll:
+        new_cache = {}
+        for g in range(n_groups):
+            pg = jax.tree.map(lambda a: a[g], params["layers"])
+            cg = jax.tree.map(lambda a: a[g], layer_cache)
+            x, ncg = group_body(x, (pg, cg))
+            new_cache[g] = ncg
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[new_cache[g] for g in range(n_groups)])
+    else:
+        x, new_cache = jax.lax.scan(group_body, x,
+                                    (params["layers"], layer_cache))
+    if "tail" in cache:
+        new_tail = {}
+        for i, kind in enumerate(cfg.tail_pattern):
+            x, nc = slot_step(x, params["tail"][str(i)], kind,
+                              cache["tail"][str(i)])
+            new_tail[str(i)] = nc
+        new_cache["tail"] = new_tail
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(C)
+    logits = x @ head
+    return logits, new_cache

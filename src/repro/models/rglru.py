@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit with diagonal recurrence:
+    r_t = sigmoid(x_t * w_r + b_r)          (recurrence gate)
+    i_t = sigmoid(x_t * w_i + b_i)          (input gate)
+    a_t = exp(c * softplus(lam) * (-r_t))   (per-channel decay in (0,1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence form uses ``jax.lax.associative_scan`` (log-depth, FLOPs
+visible to cost analysis); decode is an O(1) state update — the hybrid
+arch's ``long_500k`` cell rides on this plus windowed local attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import C, _cast
+from repro.models.config import ModelConfig
+from repro.models.ssm import _causal_conv
+from repro.runtime.shardings import Profile, cons
+
+_C_GATE = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), jnp.float32) * std,
+        "w_gate": jax.random.normal(ks[1], (d, w), jnp.float32) * std,
+        "conv": jax.random.normal(ks[2], (4, w), jnp.float32) * 0.1,
+        "w_r": jnp.zeros((w,), jnp.float32),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 0.5, jnp.float32),
+        "w_out": jax.random.normal(ks[3], (w, d), jnp.float32) * std,
+    }
+
+
+def rglru_specs(cfg: ModelConfig, prof: Profile):
+    return {
+        "w_x": prof.w_in(), "w_gate": prof.w_in(), "conv": prof.vector(),
+        "w_r": prof.bias_ff(), "b_r": prof.bias_ff(),
+        "w_i": prof.bias_ff(), "b_i": prof.bias_ff(),
+        "lam": prof.bias_ff(), "w_out": prof.w_out(),
+    }
+
+
+def _gates(p, xb):
+    """xb (..., W) f32 -> (a, ix) decay and gated input."""
+    r = jax.nn.sigmoid(xb * p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(xb * p["w_i"] + p["b_i"])
+    log_a = -_C_GATE * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    ix = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xb)
+    return a, ix
+
+
+def rglru_apply(p, x, cfg: ModelConfig, prof: Profile, *,
+                return_state=False):
+    """Full sequence. x (B, S, D) -> (B, S, D)."""
+    p = _cast(p)
+    xb_raw = x @ p["w_x"]
+    xb_raw = cons(xb_raw, prof.act_btf(), prof)
+    xb = _causal_conv(xb_raw, p["conv"]).astype(jnp.float32)
+    gate = jax.nn.gelu(
+        (x @ p["w_gate"]).astype(jnp.float32))               # (B,S,W)
+    a, ix = _gates(jax.tree.map(lambda v: v.astype(jnp.float32), p), xb)
+
+    def combine(lhs, rhs):
+        a1, h1 = lhs
+        a2, h2 = rhs
+        return a1 * a2, h1 * a2 + h2
+
+    _, h = jax.lax.associative_scan(combine, (a, ix), axis=1)
+    out = (h * gate).astype(C)
+    out = out @ p["w_out"]
+    if return_state:
+        final = {"state": h[:, -1],
+                 "conv": xb_raw[:, -3:].astype(jnp.float32)}
+        return out, final
+    return out
+
+
+def rglru_init_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "state": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, 3, w), dtype),
+    }
+
+
+def rglru_decode(p, x, cache, cfg: ModelConfig, prof: Profile):
+    """One-token step. x (B, 1, D)."""
+    p = _cast(p)
+    xb = x @ p["w_x"]                                        # (B,1,W)
+    window = jnp.concatenate(
+        [cache["conv"].astype(xb.dtype), xb], axis=1)        # (B,4,W)
+    xc = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                    p["conv"].astype(jnp.float32))           # (B,W)
+    gate = jax.nn.gelu((x[:, 0] @ p["w_gate"]).astype(jnp.float32))
+    pf = jax.tree.map(lambda v: v.astype(jnp.float32), p)
+    a, ix = _gates(pf, xc)
+    h = cache["state"].astype(jnp.float32) * a + ix
+    out = ((h * gate).astype(C) @ p["w_out"])[:, None]
+    return out, {"state": h.astype(cache["state"].dtype),
+                 "conv": window[:, 1:].astype(cache["conv"].dtype)}

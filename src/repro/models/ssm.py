@@ -1,0 +1,203 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD: intra-chunk terms are dense einsums (quadratic within the
+chunk only); inter-chunk state propagation is a ``jax.lax.associative_
+scan`` over chunks — log-depth, fully visible to cost analysis, and the
+decode path is an O(1) per-token state update (this is what makes the
+``long_500k`` cell sub-quadratic).
+
+Heads are sharded over the "model" axis (B/C projections are ngroups=1,
+replicated); sequence stays unsharded inside the mixer (the recurrence is
+sequential in S) — activations re-shard at block boundaries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import C, _cast, rmsnorm
+from repro.models.config import ModelConfig
+from repro.runtime.shardings import Profile, cons
+from jax.sharding import PartitionSpec as P
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        # fused in-projection: [z, x, B, C, dt]
+        "w_in": jax.random.normal(
+            ks[0], (d, 2 * di + 2 * n + h), jnp.float32) * std,
+        "conv": jax.random.normal(
+            ks[1], (w, di + 2 * n), jnp.float32) * 0.1,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(ks[2], (di, d), jnp.float32) * std,
+    }
+
+
+def mamba_specs(cfg: ModelConfig, prof: Profile):
+    return {
+        "w_in": prof.w_in(), "conv": prof.vector(),
+        "a_log": prof.vector(), "dt_bias": prof.vector(),
+        "d_skip": prof.vector(), "norm": prof.bias_ff(),
+        "w_out": prof.w_out(),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + n]
+    c = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xin, b, c, dt
+
+
+def _causal_conv(seq, weight):
+    """Depthwise causal conv: seq (B, S, Ch), weight (W, Ch)."""
+    w = weight.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + seq.shape[1]].astype(jnp.float32) \
+            * weight[i].astype(jnp.float32)
+    return out.astype(seq.dtype)
+
+
+def mamba_apply(p, x, cfg: ModelConfig, prof: Profile, *,
+                return_state=False):
+    """Full-sequence SSD. x (B, S, D) -> (B, S, D).
+    return_state: also return the decode cache {state, conv} after S."""
+    p = _cast(p)
+    bsz, s_orig, _ = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % q
+    s = s_orig + pad
+    nc = s // q
+
+    z, xin, b, c, dt = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv"]))
+    xin, b, c = (conv_out[..., :di], conv_out[..., di:di + n],
+                 conv_out[..., di + n:])
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(
+        jnp.float32))                                        # (B,S,H)
+    if pad:
+        # dt=0 on padded rows: decay=1, contribution=0 -> padding is
+        # invisible to both outputs and the final state.
+        padw = ((0, 0), (0, pad), (0, 0))
+        valid = jnp.arange(s) < s_orig
+        dt = jnp.where(valid[None, :, None], jnp.pad(dt, padw), 0.0)
+        xin = jnp.pad(xin, padw)
+        b = jnp.pad(b, padw)
+        c = jnp.pad(c, padw)
+        z = jnp.pad(z, padw)
+    da = dt * a                                              # <= 0
+
+    xh = cons(xin.reshape(bsz, nc, q, h, hp), P(prof.da, None, None,
+                                                prof.ma, None), prof)
+    bc = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dac = da.reshape(bsz, nc, q, h)
+    dtc = dt.reshape(bsz, nc, q, h)
+
+    cums = jnp.cumsum(dac, axis=2)                           # (B,NC,Q,H)
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+    # mask BEFORE exp: exp of masked (i<j) entries overflows and poisons
+    # the backward pass via inf * 0.
+    diff = cums[:, :, :, None] - cums[:, :, None]            # (B,NC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(tri[None, None, :, :, None], diff, -1e9)
+    decay = jnp.exp(diff)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # (B,NC,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                         scores.astype(C), decay.astype(C),
+                         dtc.astype(C), xh)
+
+    # inter-chunk: associative scan of (decay_c, S_c)
+    to_end = jnp.exp(cums[:, :, -1:, :] - cums)              # (B,NC,Q,H)
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc.astype(C),
+                     (dtc * to_end).astype(C), xh)           # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                 # (B,NC,H)
+
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, s1 * d2[..., None, None].astype(C) + s2
+
+    decays, states = jax.lax.associative_scan(
+        combine, (chunk_decay, s_c), axis=1)
+    # incoming state for chunk c = state after chunk c-1
+    state_in = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cc.astype(C), state_in) \
+        * jnp.exp(cums)[..., None].astype(C)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, hp)
+    y = y + (p["d_skip"].astype(C)[None, None, :, None]
+             * xin.reshape(bsz, s, h, hp))
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z.astype(jnp.float32)).astype(C)
+    y = y[:, :s_orig]
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_state:
+        final = {"state": states[:, -1].astype(jnp.float32),
+                 "conv": conv_in[:, s_orig - (cfg.conv_width - 1):].astype(
+                     jnp.float32)}
+        return out, final
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, h, hp, n), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig, prof: Profile):
+    """One-token step. x (B, 1, D); cache {state (B,H,P,N), conv}."""
+    p = _cast(p)
+    bsz = x.shape[0]
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, b, c, dt = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)          # (B,1,Ch)
+    window = jnp.concatenate(
+        [cache["conv"].astype(conv_in.dtype), conv_in], axis=1)  # (B,W,Ch)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   p["conv"].astype(jnp.float32)))[:, None].astype(C)
+    new_conv = window[:, 1:]
+    xin, b, c = (conv_out[..., :di], conv_out[..., di:di + n],
+                 conv_out[..., di + n:])
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    da = jnp.exp(dt * a)                                       # (B,H)
+    xh = xin.reshape(bsz, h, hp)
+    state = cache["state"].astype(jnp.float32)
+    state = state * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32),
+        b[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), state)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(C) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(C)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out, {"state": state.astype(cache["state"].dtype),
+                 "conv": new_conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,10 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.compress import topk_compress, error_feedback_init
+from repro.optim.ordered_reduce import ordered_ring_reduce, ordered_tree_sum
+
+__all__ = [
+    "adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+    "topk_compress", "error_feedback_init", "ordered_ring_reduce",
+    "ordered_tree_sum",
+]

@@ -1,0 +1,70 @@
+"""Adafactor with factored second moments (Shazeer & Stern 2018).
+
+Used for the largest assigned architecture (arctic-480b): the factored
+row/col statistics keep optimizer state ~O(R+C) per matrix instead of
+O(R·C), which is what lets a 480B-parameter MoE fit the 16 GB/chip HBM
+budget on the production mesh (DESIGN.md §6)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"stats": jax.tree.map(leaf, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, *, lr=1e-2, eps=1e-30,
+                     decay_pow=0.8, clip_threshold=1.0, wd=0.0):
+    step = state["step"] + 1
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -decay_pow)
+
+    def leaf_core(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = vr.mean(axis=-1, keepdims=True)
+            u = g * jax.lax.rsqrt(vr[..., None] / denom[..., None]) \
+                * jax.lax.rsqrt(vc[..., None, :])
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v)
+            new_s = {"v": v}
+        # update clipping (RMS(u) <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        pf = p.astype(jnp.float32)
+        p2 = pf - lr * u - lr * wd * pf
+        return p2.astype(p.dtype), new_s
+
+    def leaf(p, g, s):
+        # stacked layer leaves (G, ...): apply per group via lax.map so
+        # the f32 intermediates are group-sized, not stack-sized
+        if p.ndim >= 3 and p.shape[0] > 1 and p.size > 2e8:
+            return jax.lax.map(lambda args: leaf_core(*args), (p, g, s))
+        return leaf_core(p, g, s)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = tdef.flatten_up_to(state["stats"])
+    outs = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    p2 = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    s2 = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return p2, {"stats": s2, "step": step}

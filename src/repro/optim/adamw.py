@@ -1,0 +1,48 @@
+"""AdamW (pure-jnp pytree implementation).
+
+This is the XLA-visible twin of kernels/fused_adamw.py: the dry-run and
+roofline use this version (cost_analysis sees its FLOPs/bytes); on real
+TPU the fast-mode commit path swaps in the fused Pallas kernel
+(kernels/ops.adamw_update) leaf-by-leaf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, *, lr=1e-3, b1=0.9, b2=0.999,
+                 eps=1e-8, wd=0.01):
+    step = state["step"] + 1
+    bc1 = 1.0 - jnp.power(jnp.float32(b1), step.astype(jnp.float32))
+    bc2 = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
+
+    def leaf_core(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        p2 = p.astype(jnp.float32) - lr * (upd + wd * p.astype(jnp.float32))
+        return p2.astype(p.dtype), m2, v2
+
+    def leaf(p, g, m, v):
+        # stacked layer leaves: per-group update bounds f32 temps
+        if p.ndim >= 3 and p.shape[0] > 1 and p.size > 2e8:
+            return jax.lax.map(lambda args: leaf_core(*args), (p, g, m, v))
+        return leaf_core(p, g, m, v)
+
+    out = jax.tree.map(leaf, params, grads, state["m"], state["v"])
+    p2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m2 = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v2 = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return p2, {"m": m2, "v": v2, "step": step}

@@ -1,0 +1,54 @@
+"""Elastic scaling, deterministically (paper §2.1 applied to workers).
+
+Pot treats thread start/stop as sequenced events; we treat WORKER
+join/leave the same way.  The ElasticLaneManager wraps the round-robin
+sequencer's lane tree: a joining worker is spawned as a child lane of the
+coordinator lane and only starts receiving sequence numbers at a
+deterministic point in the order; a leaving worker's lane is stopped the
+same way.  Two runs with the same join/leave schedule (in *logical* time,
+i.e. sequence positions — not wall-clock) produce identical transaction
+orders, so scaling events never fork replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.sequencer import RoundRobinSequencer
+
+
+@dataclasses.dataclass
+class ScalingEvent:
+    at_round: int          # logical round when the event takes effect
+    action: str            # "join" | "leave"
+    lane_id: int | None = None
+    parent: int = 0
+
+
+class ElasticLaneManager:
+    """Deterministic worker pool: schedule(events) -> per-round lane sets
+    and a sequencer whose numbering reflects joins/leaves."""
+
+    def __init__(self, n_initial: int, events: list[ScalingEvent] = ()):
+        self.seq = RoundRobinSequencer(n_root_lanes=n_initial)
+        self.events = sorted(events, key=lambda e: (e.at_round, e.action,
+                                                    e.lane_id or -1))
+        self._round = 0
+
+    def advance_to(self, round_idx: int) -> None:
+        """Apply all scaling events up to ``round_idx`` (deterministic
+        order: sorted by (round, action, lane))."""
+        for ev in self.events:
+            if self._round < ev.at_round <= round_idx:
+                if ev.action == "join":
+                    ev.lane_id = self.seq.spawn_lane(ev.parent,
+                                                     lane_id=ev.lane_id)
+                else:
+                    self.seq.stop_lane(ev.lane_id)
+        self._round = max(self._round, round_idx)
+
+    def live_lanes(self) -> list[int]:
+        return self.seq.lane_order()
+
+    def assign(self, txn_lanes) -> "list[int]":
+        return self.seq.order_for(txn_lanes)

@@ -1,0 +1,141 @@
+"""Sharding profiles: how (DP/FSDP/TP/EP/SP) map onto the mesh axes.
+
+Axes (launch/mesh.py):
+  single-pod  (16, 16)    -> ("data", "model")
+  multi-pod   (2, 16, 16) -> ("pod", "data", "model")
+
+The profile below is MaxText-style 2D/3D sharding:
+  - DP/FSDP over ("pod", "data"): batch + parameter/optimizer-state
+    storage (ZeRO-3 — GSPMD inserts per-layer all-gathers).
+  - TP over "model": attention heads, MLP hidden, vocab, experts (EP).
+  - SP over "model": sequence dim of activations at layer boundaries
+    (Megatron-SP style), and of the KV cache for long-context decode
+    when kv_heads < model axis size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """Activation/parameter PartitionSpec factory for one mesh shape."""
+
+    data_axes: tuple = ("data",)      # ("pod", "data") when multi-pod
+    model_axis: str = "model"
+    enabled: bool = True              # False -> no constraints (smoke tests)
+    fsdp: bool = True                 # shard params over data axes too
+    seq_shard: bool = True            # SP at layer boundaries
+    replicated_batch: bool = False    # batch too small to shard (long_500k)
+    mesh: object = None               # concrete Mesh for shard_map regions
+    pure_dp: bool = False             # use the model axis as extra data:
+    # 256-way FSDP, no TP/SP — no activation gathers or partial-sum
+    # reductions at all; the winning schedule for <=32B dense at 4k
+    # (see EXPERIMENTS.md §Perf)
+
+    @property
+    def da(self):
+        if self.replicated_batch:
+            return None
+        if self.pure_dp:
+            return tuple(self.data_axes) + (self.model_axis,)
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def ma(self):
+        if self.pure_dp:
+            return None               # activations never use the TP axis
+        return self.model_axis
+
+    # ---- activations ----
+    def act_btd(self) -> P:           # (B, S, D) at block boundaries
+        return P(self.da, self.ma if self.seq_shard else None, None)
+
+    def act_gathered(self) -> P:      # (B, S, D) sublayer entry: the SP
+        # all-gather before column-parallel projections (Megatron-SP)
+        return P(self.da, None, None)
+
+    def act_bthd(self) -> P:          # (B, S, H*hd) flat, pre-head-split
+        # constrain on the FLAT head dim (always divisible — d_model
+        # scale); per-head dims (e.g. arctic's 56 heads, stablelm's kv=8)
+        # rarely divide the model axis, GSPMD re-infers after reshape.
+        return P(self.da, None, self.ma)
+
+    def act_btf(self) -> P:           # (B, S, F) MLP hidden
+        return P(self.da, None, self.ma)
+
+    def act_btv(self) -> P:           # (B, S, V) logits: vocab over TP
+        return P(self.da, None, self.ma)
+
+    def batch(self) -> P:             # (B, S) tokens
+        return P(self.da, None)
+
+    # ---- parameters (never affected by replicated_batch) ----
+    def _fs(self, axis):
+        if not self.fsdp:
+            return None
+        if self.pure_dp:
+            return tuple(self.data_axes) + (self.model_axis,)
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def embed(self) -> P:             # (V, D): vocab over the model axis
+        # (storage; a FSDP'd vocab table would need a full gather at the
+        # logit matmul).  Under pure_dp the model axis is free for this.
+        return P(self.model_axis, None)
+
+    def head(self) -> P:              # (D, V)
+        return P(None, self.model_axis)
+
+    def w_in(self) -> P:              # (D, F) / (D, H*hd)
+        if self.pure_dp:
+            return P(self._fs(0), None)
+        return P(self._fs(0), self.ma)
+
+    def w_out(self) -> P:             # (F, D) / (H*hd, D)
+        if self.pure_dp:
+            return P(None, self._fs(1))
+        return P(self.ma, self._fs(1))
+
+    def bias_ff(self) -> P:           # (F,)
+        return P(self.ma)
+
+    def experts_in(self) -> P:       # (E, D, F): EP over model, FSDP
+        # storage over data on D, ZeRO-gathered inside the MoE shard_map
+        # (the gather's backward is the grad reduce-scatter)
+        return P(self.model_axis, self._fs(1), None)
+
+    def experts_out(self) -> P:       # (E, F, D): F over data either way
+        # (Megatron contraction split, or FSDP storage to gather at use)
+        return P(self.model_axis, self._fs(1), None)
+
+    def vector(self) -> P:            # (D,) norm scales
+        return P(None)
+
+    # ---- KV cache (decode) ----
+    def cache_kv(self, n_kv: int, model_size: int) -> P:
+        # (B, S, KV, hd): shard KV heads over model when divisible,
+        # else shard the sequence (context parallelism for long decode).
+        if n_kv % model_size == 0 and n_kv >= model_size:
+            return P(self.da, None, self.ma, None)
+        return P(self.da, self.ma, None, None)
+
+
+def cons(x, spec: P, profile: Profile, barrier: bool = False):
+    """with_sharding_constraint if profile is enabled, else identity.
+
+    barrier=True pins the reshard to THIS value's dtype: XLA otherwise
+    commutes dtype converts across collectives and can put f32 on the
+    wire where bf16 was annotated (2x collective bytes)."""
+    if not profile.enabled:
+        return x
+    out = jax.lax.with_sharding_constraint(x, spec)
+    if barrier:
+        out = jax.lax.optimization_barrier(out)
+    return out
+
+
+SMOKE = Profile(enabled=False)

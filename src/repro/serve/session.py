@@ -1,0 +1,103 @@
+"""Deterministic batched serving session (Pot × decoding).
+
+Model math runs through models/lm.decode_step; the *shared serving
+state* — the page table mapping decode slots to KV pages, and page
+versions — is managed as preordered transactions: each decode step, every
+active slot's page-append is a transaction sequenced by the round-robin
+sequencer over slots; commits apply through the ordered paged-commit
+kernel (kernels/kv_commit.py), stamping page versions with sequence
+numbers.  Two replicas fed the same requests emit bitwise-identical
+streams regardless of arrival interleavings (tests/test_serve.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sequencer import RoundRobinSequencer
+from repro.kernels import ops
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.runtime.shardings import SMOKE, Profile
+
+
+@dataclasses.dataclass
+class Session:
+    cfg: ModelConfig
+    params: dict
+    n_slots: int
+    max_seq: int
+    page_size: int = 16
+    prof: Profile = SMOKE
+
+    def __post_init__(self):
+        self.cache = lm.init_cache(self.cfg, self.n_slots, self.max_seq,
+                                   self.prof)
+        self.pos = jnp.zeros((self.n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self.active = np.zeros((self.n_slots,), bool)
+        self.seqr = RoundRobinSequencer(n_root_lanes=self.n_slots)
+        # paged metadata store (shared state under Pot commit)
+        n_pages = self.n_slots * (self.max_seq // self.page_size)
+        self.page_meta = jnp.zeros((n_pages, self.page_size, 8),
+                                   jnp.float32)
+        self.page_versions = jnp.zeros((n_pages,), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, po: lm.decode_step(p, c, t, po, self.cfg,
+                                               self.prof))
+
+    def add_request(self, slot: int, first_token: int) -> None:
+        assert not self.active[slot]
+        self.active[slot] = True
+        self.tokens = self.tokens.at[slot, 0].set(first_token)
+        self.pos = self.pos.at[slot].set(0)
+
+    def step(self) -> np.ndarray:
+        """One decode round: model math + ordered page-commit of every
+        active slot's new row.  Returns the emitted tokens (greedy)."""
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.tokens, self.pos)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+
+        # ---- Pot commit of page metadata, in sequencer order ----
+        slots = [s for s in range(self.n_slots) if self.active[s]]
+        if slots:
+            sn = self.seqr.order_for(slots)
+            page_idx = jnp.asarray(
+                [s * (self.max_seq // self.page_size)
+                 + int(self.pos[s]) // self.page_size for s in slots],
+                jnp.int32)
+            row_idx = jnp.asarray(
+                [int(self.pos[s]) % self.page_size for s in slots],
+                jnp.int32)
+            rows = jnp.stack([
+                jnp.full((8,), float(nxt[s]), jnp.float32) for s in slots])
+            commit = jnp.ones((len(slots),), jnp.int32)
+            self.page_meta, self.page_versions = ops.kv_cache_commit(
+                self.page_meta, self.page_versions, rows, page_idx,
+                row_idx, jnp.asarray(sn, jnp.int32), commit)
+
+        self.tokens = nxt[:, None]
+        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
+        return np.asarray(nxt)
+
+    def generate(self, n_steps: int) -> np.ndarray:
+        """Greedy-decode n_steps for all active slots; (slots, n) tokens."""
+        out = []
+        for _ in range(n_steps):
+            out.append(self.step())
+        return np.stack(out, axis=1)
+
+    def fingerprint(self) -> int:
+        """Order-sensitive hash of (page_meta, versions) — the replica
+        consistency check."""
+        h = 0x811C9DC5
+        for x in (np.asarray(self.page_versions).tobytes(),
+                  np.asarray(self.page_meta).tobytes()):
+            for chunk in x[::97]:
+                h = ((h ^ chunk) * 0x01000193) & 0xFFFFFFFF
+        return h

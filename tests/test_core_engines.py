@@ -1,0 +1,329 @@
+"""Unit + property tests for the Pot core engines.
+
+The central properties (DESIGN.md §8):
+  P1  PCC == PoGL (serial oracle) bitwise, for any transactions + order.
+  P2  PCC output is invariant to arrival order / lane count / timing.
+  P3  DeSTM-analog == PoGL under the shared round-robin order.
+  P4  OCC output DOES depend on the arrival permutation (witness).
+  P5  PCC makes progress: rounds <= K; head of prefix always commits.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MODE_FAST, MODE_PREFIX, NOP, READ, RMW, WRITE,
+                        ExplicitSequencer, ReplaySequencer,
+                        RoundRobinSequencer, destm_execute, fingerprint,
+                        make_batch, make_store, occ_execute, pcc_execute,
+                        pogl_execute, run_all)
+from repro.core import workloads as W
+
+
+def _fp(store) -> int:
+    return int(fingerprint(store))
+
+
+def _seq_for(wl, n_lanes=None):
+    seqr = RoundRobinSequencer(n_root_lanes=n_lanes or wl.n_lanes)
+    return jnp.asarray(seqr.order_for(wl.lanes.tolist()), jnp.int32)
+
+
+# ---------------------------------------------------------------- txn VM
+class TestTxnVM:
+    def test_read_your_writes(self):
+        # WRITE 5 <- 7 then READ 5 must observe 7, not memory
+        batch = make_batch([[(WRITE, 5, False, 7), (READ, 5, False, 0),
+                             (WRITE, 6, False, 0)]])
+        store = make_store(16)
+        res = run_all(batch, store.values)
+        # acc after read = 7 -> write to 6 stores acc+0 = 7
+        assert int(res.wvals[0, 1, 0]) == 7
+        assert int(res.rn[0]) == 1 and int(res.wn[0]) == 2
+
+    def test_indirect_addressing_is_data_dependent(self):
+        # M[3] = 9 -> READ 3 (last=9) -> READ indirect 2 => addr (2+9)%16=11
+        store = make_store(16, init=np.arange(16))
+        batch = make_batch([[(READ, 3, False, 0), (READ, 2, True, 0)]])
+        res = run_all(batch, store.values)
+        assert int(res.raddrs[0, 1]) == (2 + 3) % 16
+
+    def test_deferred_updates_do_not_mutate(self):
+        store = make_store(8)
+        batch = make_batch([[(WRITE, 0, False, 42)]])
+        run_all(batch, store.values)
+        assert int(store.values[0, 0]) == 0
+
+    def test_last_write_wins_within_txn(self):
+        batch = make_batch([[(WRITE, 2, False, 1), (WRITE, 2, False, 9)]])
+        store = make_store(8)
+        seq = jnp.asarray([1], jnp.int32)
+        out = pogl_execute(store, batch, seq)
+        assert int(out.values[2, 0]) == 9
+
+
+# ------------------------------------------------------------- sequencer
+class TestSequencer:
+    def test_round_robin_deterministic(self):
+        a = RoundRobinSequencer(n_root_lanes=3).order_for([0, 1, 2, 0, 1, 2])
+        b = RoundRobinSequencer(n_root_lanes=3).order_for([0, 1, 2, 0, 1, 2])
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, [1, 2, 3, 4, 5, 6])
+
+    def test_lane_tree_postorder_spawn(self):
+        # paper §2.1: t=(a;b;c), u=(d;e;f), b spawns v=(g;h)
+        # expected order: a d b e g c f h
+        s = RoundRobinSequencer(n_root_lanes=1)
+        u = s.spawn_lane(0)
+        assert s.lane_order() == [u, 0]  # post-order: children first
+
+    def test_lane_stop_is_deterministic(self):
+        s = RoundRobinSequencer(n_root_lanes=2)
+        s1 = s.get_seq_no(0)
+        s2 = s.get_seq_no(1)
+        s.stop_lane(1)
+        s3 = s.get_seq_no(0)
+        s4 = s.get_seq_no(0)
+        assert (s1, s2) == (1, 2)
+        # pending round-robin numbers drain, then only lane 0 gets numbers
+        assert s3 < s4
+
+    def test_replay_sequencer(self):
+        rs = ReplaySequencer([2, 0, 1])
+        np.testing.assert_array_equal(rs.order_for([0, 0, 0]), [2, 3, 1])
+
+    def test_explicit_sequencer_detects_hang(self):
+        es = ExplicitSequencer(["a", "b", "c"])
+        with pytest.raises(RuntimeError, match="waits forever"):
+            es.order_for(["a", "b"])  # 'c' never executes -> would hang
+
+
+# ------------------------------------------------ serializability (P1,P3)
+WORKLOADS = [
+    W.counters(n_txns=16, n_objects=32, n_reads=2, n_writes=2, n_lanes=4,
+               skew=1.0, seed=2),
+    W.vacation_like(n_txns=20, n_objects=128, n_lanes=4, seed=3),
+    W.kmeans_like(n_txns=16, n_lanes=4, seed=4),
+    W.ssca2_like(n_txns=24, n_objects=512, n_lanes=8, seed=5),
+    W.labyrinth_like(n_txns=8, n_objects=64, path_len=8, n_lanes=4, seed=6),
+    W.genome_like(n_txns=16, n_objects=128, n_lanes=4, seed=7),
+    W.yada_like(n_txns=12, n_objects=128, n_lanes=4, seed=8),
+    W.intruder_like(n_txns=16, n_objects=128, n_lanes=4, seed=9),
+    W.bayes_like(n_txns=8, n_objects=64, n_lanes=4, seed=10),
+    W.stmbench7_like("rw", n_txns=16, n_objects=256, n_lanes=4, seed=11),
+]
+
+
+@pytest.mark.parametrize("wl", WORKLOADS, ids=lambda w: w.name)
+def test_pcc_equals_serial_oracle(wl):
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    oracle = pogl_execute(store, wl.batch, seq)
+    out, trace = pcc_execute(store, wl.batch, seq)
+    np.testing.assert_array_equal(np.asarray(out.values),
+                                  np.asarray(oracle.values))
+    assert int(out.gv) == wl.batch.n_txns
+    assert int(trace.rounds) <= wl.batch.n_txns  # P5 progress
+
+
+@pytest.mark.parametrize("wl", WORKLOADS[:6], ids=lambda w: w.name)
+def test_destm_equals_serial_oracle(wl):
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    oracle = pogl_execute(store, wl.batch, seq)
+    out, trace = destm_execute(store, wl.batch, seq,
+                               jnp.asarray(wl.lanes, jnp.int32), wl.n_lanes)
+    np.testing.assert_array_equal(np.asarray(out.values),
+                                  np.asarray(oracle.values))
+
+
+def test_pcc_arrival_invariance():
+    """P2: permuting the *storage order* of transactions (arrival) while
+    keeping their sequence numbers fixed must not change the outcome."""
+    wl = W.vacation_like(n_txns=24, n_objects=128, n_lanes=4, seed=1)
+    store = make_store(wl.n_objects)
+    seq = np.asarray(_seq_for(wl))
+    base_fp = None
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        perm = rng.permutation(wl.batch.n_txns)
+        import jax
+        batch_p = jax.tree.map(lambda a: a[perm], wl.batch)
+        seq_p = jnp.asarray(seq[perm], jnp.int32)
+        out, _ = pcc_execute(store, batch_p, seq_p)
+        fp = _fp(out)
+        if base_fp is None:
+            base_fp = fp
+        assert fp == base_fp
+
+
+def test_occ_is_nondeterministic_witness():
+    """P4: the baseline's outcome depends on the interleaving (this is the
+    problem Pot exists to remove)."""
+    wl = W.counters(n_txns=16, n_objects=8, n_reads=2, n_writes=2,
+                    n_lanes=4, skew=0.0, seed=12)
+    store = make_store(wl.n_objects)
+    k = wl.batch.n_txns
+    fps = set()
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        arrival = jnp.asarray(rng.permutation(k), jnp.int32)
+        out, _ = occ_execute(store, wl.batch, arrival)
+        fps.add(_fp(out))
+    assert len(fps) > 1, "expected arrival-order-dependent outcomes"
+
+
+def test_occ_record_replay_through_pot():
+    """§2.1 record/replay: record an OCC commit order, replay it as the
+    sequencer order -> Pot reproduces that exact outcome deterministically."""
+    wl = W.vacation_like(n_txns=16, n_objects=64, n_lanes=4, seed=5)
+    store = make_store(wl.n_objects)
+    arrival = jnp.asarray(np.random.default_rng(9).permutation(16), jnp.int32)
+    occ_out, occ_trace = occ_execute(store, wl.batch, arrival)
+    commit_pos = np.asarray(occ_trace.commit_pos)
+    order = np.argsort(commit_pos)  # txn indices in commit order
+    seq = jnp.asarray(ReplaySequencer(order.tolist()).order_for(
+        wl.lanes.tolist()), jnp.int32)
+    replay_out, _ = pcc_execute(store, wl.batch, seq)
+    np.testing.assert_array_equal(np.asarray(replay_out.values),
+                                  np.asarray(occ_out.values))
+
+
+# --------------------------------------------------------- modes (paper §2.2.3)
+def test_disjoint_txns_commit_in_one_round_all_fast():
+    """Non-conflicting successive transactions all commit simultaneously
+    (multiple simultaneous fast transactions)."""
+    progs = [[(RMW, i, False, 1)] for i in range(8)]
+    batch = make_batch(progs)
+    store = make_store(8)
+    seq = jnp.arange(1, 9, dtype=jnp.int32)
+    out, trace = pcc_execute(store, batch, seq)
+    assert int(trace.rounds) == 1
+    mode = np.asarray(trace.mode)
+    assert (mode[0] == MODE_FAST) and (mode[1:] == MODE_PREFIX).all()
+    assert int(trace.retries.sum()) == 0
+
+
+def test_fully_conflicting_txns_serialize():
+    """All txns RMW the same object -> serialized commits, all in fast
+    mode; live promotion (§2.2.3) commits TWO per round (the prefix head
+    + the promoted successor), halving the round count vs the Pot*
+    ablation — the paper's 'Pot close to PoGL when speculation does not
+    help, live promotion pays off' observation."""
+    progs = [[(RMW, 0, False, 1)] for _ in range(6)]
+    batch = make_batch(progs)
+    store = make_store(4)
+    seq = jnp.arange(1, 7, dtype=jnp.int32)
+    out, trace = pcc_execute(store, batch, seq)
+    assert int(out.values[0, 0]) == 6
+    assert int(trace.rounds) == 3           # head + promotion per round
+    assert int(trace.promotions) == 3
+    assert (np.asarray(trace.mode) == MODE_FAST).all()
+    # Pot* ablation: no promotion -> one commit per round
+    out2, trace2 = pcc_execute(store, batch, seq, live_promotion=False)
+    np.testing.assert_array_equal(np.asarray(out2.values),
+                                  np.asarray(out.values))
+    assert int(trace2.rounds) == 6 and int(trace2.promotions) == 0
+
+
+def test_live_promotion_matches_oracle_on_workloads():
+    """Promotion must never change outcomes, only round counts."""
+    from repro.core import workloads as W
+    for wl in [W.vacation_like(n_txns=20, n_objects=64, n_lanes=4, seed=8),
+               W.kmeans_like(n_txns=16, n_lanes=4, seed=9)]:
+        store = make_store(wl.n_objects)
+        seq = _seq_for(wl)
+        oracle = pogl_execute(store, wl.batch, seq)
+        for lp in (False, True):
+            out, tr = pcc_execute(store, wl.batch, seq, live_promotion=lp)
+            np.testing.assert_array_equal(np.asarray(out.values),
+                                          np.asarray(oracle.values))
+        out_lp, tr_lp = pcc_execute(store, wl.batch, seq)
+        out_np, tr_np = pcc_execute(store, wl.batch, seq,
+                                    live_promotion=False)
+        assert int(tr_lp.rounds) <= int(tr_np.rounds)
+
+
+def test_versions_are_sequence_numbers():
+    """§3.1: sequence numbers retrofitted as versions — after commit, each
+    object's version equals the seq number of its last writer."""
+    progs = [[(WRITE, 0, False, 5)], [(WRITE, 1, False, 6)],
+             [(WRITE, 0, False, 7)]]
+    batch = make_batch(progs)
+    store = make_store(4)
+    seq = jnp.asarray([1, 2, 3], jnp.int32)
+    out, _ = pcc_execute(store, batch, seq)
+    assert int(out.versions[0]) == 3   # last writer of obj 0 was txn seq 3
+    assert int(out.versions[1]) == 2
+    assert int(out.gv) == 3
+
+
+def test_gv_accumulates_across_batches():
+    progs = [[(RMW, 0, False, 1)]]
+    batch = make_batch(progs)
+    store = make_store(2)
+    store, _ = pcc_execute(store, batch, jnp.asarray([1], jnp.int32))
+    store, _ = pcc_execute(store, batch, jnp.asarray([1], jnp.int32))
+    assert int(store.gv) == 2
+    assert int(store.values[0, 0]) == 2
+
+
+# --------------------------------------------------------------- hypothesis
+@st.composite
+def txn_programs(draw):
+    n_objects = draw(st.sampled_from([4, 8, 16]))
+    k = draw(st.integers(1, 10))
+    progs = []
+    for _ in range(k):
+        n_ins = draw(st.integers(1, 5))
+        ins = []
+        for _ in range(n_ins):
+            op = draw(st.sampled_from([READ, WRITE, RMW]))
+            addr = draw(st.integers(0, n_objects - 1))
+            ind = draw(st.booleans())
+            val = draw(st.integers(-3, 3))
+            ins.append((op, addr, ind, val))
+        progs.append(ins)
+    return n_objects, progs
+
+
+@settings(max_examples=25, deadline=None)
+@given(txn_programs(), st.randoms(use_true_random=False))
+def test_property_pcc_serializable_and_arrival_invariant(programs, rnd):
+    """P1+P2 under random programs, including indirect addressing."""
+    import jax
+    n_objects, progs = programs
+    batch = make_batch(progs)
+    k = batch.n_txns
+    store = make_store(n_objects, init=np.arange(n_objects) % 5)
+    seq = jnp.arange(1, k + 1, dtype=jnp.int32)
+    oracle = pogl_execute(store, batch, seq)
+    out, _ = pcc_execute(store, batch, seq)
+    np.testing.assert_array_equal(np.asarray(out.values),
+                                  np.asarray(oracle.values))
+    # arrival invariance: permute storage order
+    perm = list(range(k))
+    rnd.shuffle(perm)
+    perm = np.asarray(perm)
+    batch_p = jax.tree.map(lambda a: a[perm], batch)
+    out_p, _ = pcc_execute(store, batch_p,
+                           jnp.asarray(np.asarray(seq)[perm], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out_p.values),
+                                  np.asarray(oracle.values))
+
+
+@settings(max_examples=15, deadline=None)
+@given(txn_programs())
+def test_property_destm_matches_oracle(programs):
+    n_objects, progs = programs
+    batch = make_batch(progs)
+    k = batch.n_txns
+    n_lanes = min(4, k)
+    lanes = jnp.asarray(np.arange(k) % n_lanes, jnp.int32)
+    store = make_store(n_objects)
+    seq = jnp.arange(1, k + 1, dtype=jnp.int32)
+    oracle = pogl_execute(store, batch, seq)
+    out, _ = destm_execute(store, batch, seq, lanes, n_lanes)
+    np.testing.assert_array_equal(np.asarray(out.values),
+                                  np.asarray(oracle.values))

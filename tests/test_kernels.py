@@ -1,0 +1,168 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py),
+executed in interpret mode on CPU (kernels target TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.validate import BK, BW, pack_addr_sets, validate_bitsets
+
+
+# ---------------------------------------------------------------- validate
+@pytest.mark.parametrize("k,l,n_objects", [
+    (1, 1, 32), (8, 4, 64), (13, 6, 300), (32, 16, 4096), (40, 3, 8192),
+])
+def test_validate_sweep(k, l, n_objects):
+    rng = np.random.default_rng(k * 31 + l)
+    ra = np.asarray(rng.integers(0, n_objects, (k, l)), np.int32)
+    rn = np.asarray(rng.integers(0, l + 1, (k,)), np.int32)
+    wa = np.asarray(rng.integers(0, n_objects, (max(2 * l, 4),)), np.int32)
+    wn = int(rng.integers(0, len(wa) + 1))
+    out = np.asarray(ops.validate(
+        jnp.asarray(ra), jnp.asarray(rn), jnp.asarray(wa),
+        jnp.asarray(wn, jnp.int32), n_objects))
+    exp = np.array([
+        bool(set(ra[i, :rn[i]].tolist()) & set(wa[:wn].tolist()))
+        for i in range(k)])
+    np.testing.assert_array_equal(out, exp)
+
+
+def test_validate_kernel_vs_ref_dense():
+    rng = np.random.default_rng(0)
+    k, w = 4 * BK, 2 * BW
+    read_bits = jnp.asarray(rng.integers(0, 2**31, (k, w)), jnp.int32)
+    written = jnp.asarray(rng.integers(0, 2, (w,)) *
+                          rng.integers(0, 2**31, (w,)), jnp.int32)
+    out = validate_bitsets(read_bits, written, interpret=True)
+    exp = ref.validate_bitsets_ref(read_bits, written)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_fast_mode_skips_validation_semantics():
+    """The head transaction needs no validation: with an empty written set
+    nothing ever conflicts (progress guarantee of ordered commits)."""
+    ra = jnp.asarray(np.arange(24).reshape(8, 3), jnp.int32)
+    rn = jnp.full((8,), 3, jnp.int32)
+    wa = jnp.zeros((4,), jnp.int32)
+    out = ops.validate(ra, rn, wa, jnp.asarray(0, jnp.int32), 64)
+    assert not np.asarray(out).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 8), st.sampled_from([33, 64, 257]))
+def test_validate_property(k, l, n_objects):
+    rng = np.random.default_rng(k * 131 + l * 7 + n_objects)
+    ra = np.asarray(rng.integers(0, n_objects, (k, l)), np.int32)
+    rn = np.asarray(rng.integers(0, l + 1, (k,)), np.int32)
+    wa = np.asarray(rng.integers(0, n_objects, (l,)), np.int32)
+    wn = int(rng.integers(0, l + 1))
+    out = np.asarray(ops.validate(
+        jnp.asarray(ra), jnp.asarray(rn), jnp.asarray(wa),
+        jnp.asarray(wn, jnp.int32), n_objects))
+    exp = np.array([
+        bool(set(ra[i, :rn[i]].tolist()) & set(wa[:wn].tolist()))
+        for i in range(k)])
+    np.testing.assert_array_equal(out, exp)
+
+
+# ------------------------------------------------------------- fused adamw
+@pytest.mark.parametrize("shape", [(256, 256), (3, 700), (1, 1), (512, 512),
+                                   (1000,)])
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_adamw_sweep(shape, gdtype):
+    rng = np.random.default_rng(sum(shape))
+    p = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    m = jnp.asarray(rng.normal(size=shape) * 0.1, jnp.float32)
+    v = jnp.asarray(np.abs(rng.normal(size=shape)) * 0.01, jnp.float32)
+    g = jnp.asarray(rng.normal(size=shape), gdtype)
+    got = ops.adamw_update(p, m, v, g, step=7, lr=3e-4, wd=0.1)
+    exp = ref.adamw_ref(p, m, v, g, step=7, lr=3e-4, wd=0.1)
+    for a, b in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=1e-7)
+
+
+def test_adamw_no_nan_large_steps():
+    p = jnp.ones((256, 256)) * 1e3
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    g = jnp.ones_like(p) * 1e3
+    p2, m2, v2 = ops.adamw_update(p, m, v, g, step=1)
+    assert np.isfinite(np.asarray(p2)).all()
+
+
+@pytest.mark.parametrize("stale_frac", [0.0, 0.5, 1.0])
+def test_adamw_speculative_aborts_stale_blocks(stale_frac):
+    rng = np.random.default_rng(int(stale_frac * 10))
+    r = c = 512
+    p = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    m = jnp.zeros((r, c))
+    v = jnp.zeros((r, c))
+    g = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    gr, gc = r // 256, c // 256
+    versions = jnp.asarray(
+        (rng.random((gr, gc)) < stale_frac).astype(np.int32) * 10, jnp.int32)
+    rv = jnp.asarray(5, jnp.int32)
+    got = ops.adamw_update_speculative(p, m, v, g, versions, rv, step=2)
+    exp = ref.adamw_speculative_ref(p, m, v, g, versions, rv, step=2)
+    for a, b in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=1e-7)
+    n_stale = int((np.asarray(versions) > 5).sum())
+    assert int(np.asarray(got[3]).sum()) == n_stale
+    if stale_frac == 1.0:  # everything aborted -> params untouched
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(p))
+
+
+# --------------------------------------------------------------- kv commit
+@pytest.mark.parametrize("p,page,h,s", [
+    (4, 2, 8, 3), (8, 4, 16, 5), (16, 8, 128, 8), (2, 1, 8, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kv_commit_sweep(p, page, h, s, dtype):
+    rng = np.random.default_rng(p * 7 + s)
+    cache = jnp.asarray(rng.normal(size=(p, page, h)), dtype)
+    versions = jnp.asarray(rng.integers(0, 3, (p,)), jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(s, h)), jnp.float32)
+    page_idx = jnp.asarray(rng.integers(0, p, (s,)), jnp.int32)
+    row_idx = jnp.asarray(rng.integers(0, page, (s,)), jnp.int32)
+    sn = jnp.arange(10, 10 + s, dtype=jnp.int32)
+    commit = jnp.asarray(rng.integers(0, 2, (s,)), jnp.int32)
+    got_c, got_v = ops.kv_cache_commit(cache, versions, rows, page_idx,
+                                       row_idx, sn, commit)
+    exp_c, exp_v = ref.kv_commit_ref(cache, versions, rows, page_idx,
+                                     row_idx, sn, commit)
+    np.testing.assert_allclose(np.asarray(got_c, np.float32),
+                               np.asarray(exp_c, np.float32))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(exp_v))
+
+
+def test_kv_commit_order_last_writer_wins():
+    """Two slots commit to the same (page, row): the higher sequence number
+    (later slot) must win — ordered commit semantics."""
+    cache = jnp.zeros((2, 2, 8), jnp.float32)
+    versions = jnp.zeros((2,), jnp.int32)
+    rows = jnp.stack([jnp.full((8,), 1.0), jnp.full((8,), 2.0)])
+    page_idx = jnp.asarray([1, 1], jnp.int32)
+    row_idx = jnp.asarray([0, 0], jnp.int32)
+    sn = jnp.asarray([5, 6], jnp.int32)
+    commit = jnp.asarray([1, 1], jnp.int32)
+    got_c, got_v = ops.kv_cache_commit(cache, versions, rows, page_idx,
+                                       row_idx, sn, commit)
+    assert float(got_c[1, 0, 0]) == 2.0
+    assert int(got_v[1]) == 6
+
+
+def test_kv_commit_speculative_slots_skipped():
+    cache = jnp.zeros((2, 2, 8), jnp.float32)
+    versions = jnp.zeros((2,), jnp.int32)
+    rows = jnp.ones((1, 8), jnp.float32)
+    got_c, got_v = ops.kv_cache_commit(
+        cache, versions, rows, jnp.asarray([0], jnp.int32),
+        jnp.asarray([0], jnp.int32), jnp.asarray([9], jnp.int32),
+        jnp.asarray([0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(cache))
+    assert int(got_v[0]) == 0
