@@ -5,11 +5,9 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (RoundRobinSequencer, destm_execute, make_store,
-                        occ_execute, pcc_execute, pogl_execute, run_all)
+from repro.core import PotSession, make_store, run_all
 from repro.core import metrics as M
 
 
@@ -26,28 +24,19 @@ def timeit(fn, *args, warmup=1, iters=3):
 
 
 def run_engines(wl, *, engines=("pot", "pogl", "destm", "occ")):
-    """Run a workload through the engines; return {name: EngineReport}."""
-    store = make_store(wl.n_objects)
-    seq = jnp.asarray(
-        RoundRobinSequencer(n_root_lanes=wl.n_lanes).order_for(
-            wl.lanes.tolist()), jnp.int32)
-    res = run_all(wl.batch, store.values)
+    """Run a workload through the engines; return {name: EngineReport}.
+
+    Every engine goes through the same PotSession API — the report's
+    cost model is the only per-engine piece left.
+    """
+    res = run_all(wl.batch, make_store(wl.n_objects).values)
     rn, wn = np.asarray(res.rn), np.asarray(res.wn)
     out = {}
-    if "pot" in engines:
-        _, tr = pcc_execute(store, wl.batch, seq)
-        out["pot"] = M.report_pcc(tr, wl.batch, rn, wn)
-    if "pogl" in engines:
-        pogl_execute(store, wl.batch, seq)
-        out["pogl"] = M.report_pogl(wl.batch, rn, wn)
-    if "destm" in engines:
-        _, tr = destm_execute(store, wl.batch, seq,
-                              jnp.asarray(wl.lanes, jnp.int32), wl.n_lanes)
-        out["destm"] = M.report_destm(tr, wl.batch, rn, wn, wl.n_lanes)
-    if "occ" in engines:
-        arrival = jnp.arange(wl.batch.n_txns, dtype=jnp.int32)
-        _, tr = occ_execute(store, wl.batch, arrival)
-        out["occ"] = M.report_occ(tr, wl.batch, rn, wn)
+    for name in engines:
+        session = PotSession(wl.n_objects, engine=name, n_lanes=wl.n_lanes)
+        trace = session.submit(wl.batch, wl.lanes.tolist())
+        out[name] = M.report_from_trace(name, trace, wl.batch, rn, wn,
+                                        n_lanes=wl.n_lanes)
     return out
 
 

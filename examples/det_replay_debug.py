@@ -3,54 +3,56 @@
 An order-violation bug (Fig. 1b): one transaction initializes a resource,
 another uses it.  Under traditional OCC the bug manifests only in SOME
 interleavings — the debugging nightmare Pot removes.  We (1) hunt the bug
-under OCC, (2) capture the failing commit order, (3) replay it through
-Pot — the failure now reproduces on EVERY run.
+under OCC sessions, (2) capture the failing commit order with
+``session.replay_log()``, (3) replay it through a Pot session — the
+failure now reproduces on EVERY run.  Every step uses the same
+``PotSession.submit`` API; only the engine name changes.
 
 Run:  PYTHONPATH=src python examples/det_replay_debug.py
 """
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (READ, RMW, WRITE, ReplaySequencer, make_batch,
-                        make_store, occ_execute, pcc_execute)
+from repro.core import (READ, WRITE, PotSession, ReplaySequencer, make_batch)
 
 # object 0: the resource (0 = uninitialized); object 1: consumer's result
 INIT = [(WRITE, 0, False, 42)]          # thread 1: initialize
 USE = [(READ, 0, False, 0),             # thread 2: use (assumes init!)
        (WRITE, 1, False, 0)]            # result = resource value
 batch = make_batch([INIT, USE])
-store = make_store(4)
 
 
-def buggy(values) -> bool:
-    return int(values[1, 0]) != 42      # consumer saw uninitialized 0
+def buggy(session: PotSession) -> bool:
+    return int(session.store.values[1, 0]) != 42  # saw uninitialized 0
 
 
 # --- 1. bug hunt under traditional transactions
 seen = []
 for seed in range(8):
-    arrival = jnp.asarray(np.random.default_rng(seed).permutation(2),
-                          jnp.int32)
-    out, tr = occ_execute(store, batch, arrival)
-    seen.append((seed, buggy(out.values), np.asarray(tr.commit_pos)))
+    arrival = np.random.default_rng(seed).permutation(2)
+    s = PotSession(4, engine="occ",
+                   sequencer=ReplaySequencer(arrival.tolist()))
+    s.submit(batch)
+    seen.append((seed, buggy(s), s.replay_log()))
 fails = [s for s in seen if s[1]]
 print(f"OCC: bug manifested in {len(fails)}/8 interleavings "
       f"(flaky — {[s[0] for s in fails]})")
 
 # --- 2. capture the failing order, 3. replay deterministically
-seed, _, commit_pos = fails[0]
-order = np.argsort(commit_pos)
-seq = jnp.asarray(ReplaySequencer(order.tolist()).order_for([0, 1]),
-                  jnp.int32)
-repro = [buggy(pcc_execute(store, batch, seq)[0].values)
-         for _ in range(5)]
+seed, _, commit_log = fails[0]
+repro = []
+for _ in range(5):
+    s = PotSession(4, engine="pcc", sequencer=ReplaySequencer(commit_log))
+    s.submit(batch)
+    repro.append(buggy(s))
 print(f"Pot replay of failing order: bug reproduces {sum(repro)}/5 runs")
 assert all(repro)
 
 # and the FIXED order (init before use) never fails:
-seq_fixed = jnp.asarray([1, 2], jnp.int32)
-ok = [not buggy(pcc_execute(store, batch, seq_fixed)[0].values)
-      for _ in range(5)]
+ok = []
+for _ in range(5):
+    s = PotSession(4, engine="pcc", sequencer=ReplaySequencer([0, 1]))
+    s.submit(batch)
+    ok.append(not buggy(s))
 print(f"Pot with init-before-use order:  correct {sum(ok)}/5 runs")
 assert all(ok)

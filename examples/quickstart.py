@@ -1,24 +1,30 @@
-"""Quickstart: preordered transactions in 60 seconds.
+"""Quickstart: preordered transactions in 60 seconds, via ``PotSession``.
 
-Demonstrates the paper's core claims on a toy bank-transfer workload:
-1. traditional OCC is nondeterministic — different interleavings,
+One API for every engine: a session owns the store and the sequencer,
+``session.submit(batch, lanes)`` executes a batch, and every engine —
+Pot's PCC, the PoGL serial oracle, the DeSTM analog, the OCC baseline —
+returns the same ``ExecTrace`` schema.  The demo shows the paper's core
+claims on a toy bank-transfer workload:
+
+1. traditional OCC is nondeterministic — different interleavings
+   (modelled as different sequencer orders feeding the ``occ`` engine),
    different final balances;
-2. Pot (PCC) is deterministic — any interleaving, same outcome, equal to
-   the serial execution in sequencer order;
-3. record/replay — capture an OCC run's commit order, replay it exactly.
+2. Pot (PCC) is deterministic — any storage permutation of the batch,
+   same outcome, equal to the serial PoGL oracle;
+3. record/replay — capture an OCC run's commit order with
+   ``session.replay_log()``, replay it exactly through Pot.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
-from repro.core import (READ, RMW, WRITE, ReplaySequencer,
-                        RoundRobinSequencer, fingerprint, make_batch,
-                        make_store, occ_execute, pcc_execute, pogl_execute)
+from repro.core import (READ, RMW, WRITE, PotSession, ReplaySequencer,
+                        make_batch)
 
 # 8 accounts, each starting with 100 units
-store = make_store(8, init=np.full(8, 100))
+INIT_BALANCES = np.full(8, 100)
 
 # 6 transfer transactions from 3 "threads" (lanes): move 10 from a to b,
 # where the destination of the last transfer is data-dependent (indirect)
@@ -34,41 +40,52 @@ progs = [
 batch = make_batch(progs)
 lanes = [0, 1, 2, 0, 1, 2]
 
-# --- 1. traditional transactions: outcome depends on the interleaving
+
+def session(engine, sequencer=None, n_lanes=1) -> PotSession:
+    return PotSession(8, init=INIT_BALANCES, engine=engine,
+                      sequencer=sequencer, n_lanes=n_lanes)
+
+
+# --- 1. traditional transactions: outcome depends on the interleaving.
+# OCC's "order" is whatever arrival interleaving the runtime produced —
+# we feed each interleaving in as a replayed order, same submit() call.
 fps = set()
 for seed in range(6):
-    arrival = jnp.asarray(np.random.default_rng(seed).permutation(6),
-                          jnp.int32)
-    out, _ = occ_execute(store, batch, arrival)
-    fps.add(int(fingerprint(out)))
+    arrival = np.random.default_rng(seed).permutation(6)
+    s = session("occ", sequencer=ReplaySequencer(arrival.tolist()))
+    s.submit(batch)
+    fps.add(s.fingerprint())
 print(f"OCC outcomes across 6 interleavings : {len(fps)} distinct")
 
-# --- 2. Pot: sequencer fixes the order BEFORE execution
-seqr = RoundRobinSequencer(n_root_lanes=3)
-seq = jnp.asarray(seqr.order_for(lanes), jnp.int32)
+# --- 2. Pot: the sequencer fixes the order BEFORE execution
+pot = session("pcc", n_lanes=3)
+trace = pot.submit(batch, lanes)
+commit_order = pot.replay_log()   # committed txn order (= sequencer order)
+
+# permuting the *storage order* of the batch must not change the outcome
 fps = set()
 for seed in range(6):
     perm = np.random.default_rng(seed).permutation(6)
-    import jax
+    inv = np.argsort(perm)
     batch_p = jax.tree.map(lambda a: a[perm], batch)
-    out, trace = pcc_execute(store, batch_p,
-                             jnp.asarray(np.asarray(seq)[perm], jnp.int32))
-    fps.add(int(fingerprint(out)))
-serial = pogl_execute(store, batch, seq)
+    order_p = [int(inv[t]) for t in commit_order]   # same logical order
+    s = session("pcc", sequencer=ReplaySequencer(order_p))
+    s.submit(batch_p)
+    fps.add(s.fingerprint())
+oracle = session("pogl", n_lanes=3)
+oracle.submit(batch, lanes)
 print(f"Pot outcomes across 6 interleavings : {len(fps)} distinct")
 print(f"Pot == serial oracle                : "
-      f"{fps == {int(fingerprint(serial))}}")
+      f"{fps == {oracle.fingerprint()}}")
 print(f"Pot engine rounds (parallelism)     : {int(trace.rounds)} "
       f"(vs {batch.n_txns} serial steps)")
 
-# --- 3. record/replay (paper §2.1)
-arrival = jnp.asarray([5, 3, 1, 0, 2, 4], jnp.int32)
-occ_out, occ_tr = occ_execute(store, batch, arrival)
-order = np.argsort(np.asarray(occ_tr.commit_pos))
-replay_seq = jnp.asarray(
-    ReplaySequencer(order.tolist()).order_for(lanes), jnp.int32)
-replay_out, _ = pcc_execute(store, batch, replay_seq)
+# --- 3. record/replay (paper §2.1): one line each way
+rec = session("occ", sequencer=ReplaySequencer([5, 3, 1, 0, 2, 4]))
+rec.submit(batch)
+rep = session("pcc", sequencer=rec.replay_sequencer())
+rep.submit(batch)
 print(f"record/replay reproduces OCC run    : "
-      f"{int(fingerprint(replay_out)) == int(fingerprint(occ_out))}")
+      f"{rep.fingerprint() == rec.fingerprint()}")
 print(f"final balances                      : "
-      f"{np.asarray(replay_out.values)[:, 0].tolist()}")
+      f"{np.asarray(rep.store.values)[:, 0].tolist()}")

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

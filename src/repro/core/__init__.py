@@ -1,31 +1,73 @@
 """Pot core: preordered transactions for deterministic execution.
 
-Public API:
+The one pipeline (paper §2): a *sequencer* fixes the serialization order
+before execution, then a concurrency-control *engine* executes the batch
+deterministically against the transactional store.  The public API is
+session-oriented:
+
+    PotSession                               — streaming execution layer:
+        owns the store + sequencer + a cached jitted step (donated store
+        buffers); ``submit(batch, lanes)`` / ``run_stream(batches)``
+        carry ``gv`` and the store image across batches and record the
+        commit order for ``replay_log()`` / ``replay_sequencer()``.
+    get_engine / ENGINES / Engine / EngineDef — engine registry:
+        "pcc" (Pot Concurrency Control), "pogl", "destm", "occ"
+        (and "pot" as an alias for "pcc"), every one returning the
+        canonical ``ExecTrace`` schema.
+    ExecTrace                                — one trace pytree for all
+        engines (per-txn commit_round/commit_pos/retries/mode/... plus
+        scalar rounds/exec_ops/validation_words/promotions/barrier_ops).
+
+Building blocks:
+
     TStore / make_store / fingerprint        — versioned object store
     TxnBatch / make_batch                    — transactions (dynamic r/w sets)
     RoundRobinSequencer / ReplaySequencer / ExplicitSequencer
-    pcc_execute                              — Pot Concurrency Control
-    occ_execute / pogl_execute / destm_execute — baselines
+    metrics.report_from_trace                — structural cost model
+
+Quickstart::
+
+    session = PotSession(n_objects=1024, engine="pcc", n_lanes=8)
+    for batch in batches:
+        trace = session.submit(batch, lanes)
+    assert session.fingerprint() == replica.fingerprint()
+
+Deprecated (kept as thin shims): the per-engine free functions
+``pcc_execute`` / ``occ_execute`` / ``pogl_execute`` / ``destm_execute``
+with their divergent signatures, and the old per-engine trace classes
+``PccTrace`` / ``OccTrace`` / ``DestmTrace`` (now all aliases of
+``ExecTrace``).  New code should go through ``PotSession`` or
+``get_engine(name).execute(store, batch, seq, lanes=..., n_lanes=...)``.
 """
 
 from repro.core.destm import DestmTrace, destm_execute
+from repro.core.engine import (ENGINES, MODE_FAST, MODE_PREFIX, MODE_SPEC,
+                               MODE_UNSET, Engine, EngineDef, ExecTrace,
+                               get_engine, make_trace)
 from repro.core.occ import OccTrace, occ_execute
-from repro.core.pcc import (MODE_FAST, MODE_PREFIX, MODE_SPEC, PccTrace,
-                            pcc_execute)
+from repro.core.pcc import PccTrace, pcc_execute
 from repro.core.pogl import pogl_execute
 from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
                                   RoundRobinSequencer, seq_to_order)
+from repro.core.session import PotSession
 from repro.core.tstore import TStore, fingerprint, make_store
 from repro.core.txn import (NOP, READ, RMW, WRITE, TxnBatch, TxnResult,
                             make_batch, run_all, run_txn)
 
 __all__ = [
+    # unified engine API
+    "PotSession", "ExecTrace", "Engine", "EngineDef", "ENGINES",
+    "get_engine", "make_trace",
+    "MODE_UNSET", "MODE_FAST", "MODE_PREFIX", "MODE_SPEC",
+    # store + transactions
     "TStore", "make_store", "fingerprint",
     "TxnBatch", "TxnResult", "make_batch", "run_all", "run_txn",
     "NOP", "READ", "WRITE", "RMW",
+    # sequencers
     "RoundRobinSequencer", "ReplaySequencer", "ExplicitSequencer",
     "seq_to_order",
-    "pcc_execute", "PccTrace", "MODE_FAST", "MODE_PREFIX", "MODE_SPEC",
+    # deprecated per-engine entry points
+    "pcc_execute", "PccTrace",
     "occ_execute", "OccTrace",
     "pogl_execute",
     "destm_execute", "DestmTrace",

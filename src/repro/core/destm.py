@@ -21,32 +21,24 @@ differs, which is exactly the paper's Fig. 7/9/10 story.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import protocol
+from repro.core.engine import (EngineDef, ExecTrace, make_trace,
+                               register_engine, seq_rank)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, run_all, run_txn
 
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class DestmTrace:
-    commit_round: jax.Array  # (K,) int32
-    retries: jax.Array       # (K,) int32
-    rounds: jax.Array        # ()   int32
-    exec_ops: jax.Array      # ()   int32
-    barrier_ops: jax.Array   # ()   int32 — Σ_rounds Σ_lanes (max_cost - cost):
-                             # instruction-slots lanes idle at round barriers
+# The old per-engine trace dataclass is now the canonical schema.
+# (barrier_ops — Σ_rounds Σ_lanes (max_cost - cost), the instruction-slots
+# lanes idle at round barriers — lives in the shared ExecTrace.)
+DestmTrace = ExecTrace
 
 
-@functools.partial(jax.jit, static_argnames=("n_lanes", "max_rounds"))
-def destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
-                  lanes: jax.Array, n_lanes: int,
-                  max_rounds: int | None = None) -> tuple[TStore, DestmTrace]:
+def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
+                   lanes: jax.Array, n_lanes: int,
+                   max_rounds: int | None = None) -> tuple[TStore, ExecTrace]:
     """seq: (K,) 1-based sequence numbers; lanes: (K,) lane of each txn.
 
     Token order within a round = sequence order restricted to the round's
@@ -151,7 +143,30 @@ def destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         (store.values, store.versions, jnp.zeros((k,), bool),
          jnp.zeros((), jnp.int32), tr0))
 
-    trace = DestmTrace(commit_round=tr["commit_round"], retries=tr["retries"],
-                       rounds=rnd, exec_ops=tr["exec_ops"],
-                       barrier_ops=tr["barrier_ops"])
+    # DeSTM's serialization is round-major: rounds commit in order, and
+    # within a round the token order (= sequence order restricted to the
+    # round's members) decides.  With uneven lane loads this is NOT the
+    # plain sequence order, so commit_pos must rank (round, token) pairs.
+    rank = seq_rank(seq)
+    commit_pos = seq_rank(tr["commit_round"] * (k + 1) + rank)
+    trace = make_trace(
+        k,
+        commit_round=tr["commit_round"], retries=tr["retries"],
+        rounds=rnd, exec_ops=tr["exec_ops"],
+        barrier_ops=tr["barrier_ops"],
+        # a txn executes only in its commit round
+        first_round=tr["commit_round"], commit_pos=commit_pos)
     return TStore(values=values, versions=versions, gv=store.gv + k), trace
+
+
+destm_execute = jax.jit(
+    _destm_execute, static_argnames=("n_lanes", "max_rounds"))
+
+
+def _destm_raw(store, batch, seq, lanes, n_lanes):
+    return _destm_execute(store, batch, seq, lanes, n_lanes)
+
+
+register_engine(EngineDef(
+    "destm", _destm_raw,
+    doc="DeSTM analog — one txn per lane per round, barrier-separated"))

@@ -1,0 +1,171 @@
+"""Unified engine API: one protocol, one registry, one trace schema.
+
+Pot's pipeline is always the same — a sequencer fixes the serialization
+order *before* execution, then a concurrency-control engine executes the
+batch deterministically.  Every engine therefore fits one signature:
+
+    raw(store, batch, seq, lanes, n_lanes) -> (TStore, ExecTrace)
+
+where ``seq`` is the sequencer's output (distinct 1-based sequence
+numbers; only their relative order matters) and ``lanes`` / ``n_lanes``
+describe the lane (thread) structure for engines that model it (the
+DeSTM analog).  Engines that don't need lanes ignore them; the OCC
+baseline reinterprets the sequence order as the *arrival* interleaving
+(``arrival = argsort(seq)``), which is exactly the knob its
+nondeterminism depends on.
+
+Registry:
+
+    get_engine("pcc" | "pogl" | "destm" | "occ")   ("pot" aliases "pcc")
+    ENGINES — dict of every registered engine
+
+Engines self-register at import time (``repro.core`` imports all four),
+and :func:`get_engine` lazily imports a known module on first use, so
+``from repro.core.engine import get_engine`` works standalone.
+
+The canonical :class:`ExecTrace` is the superset of the old per-engine
+trace dataclasses (``PccTrace`` / ``OccTrace`` / ``DestmTrace``, now
+aliases of it); engine-specific fields are defaulted via
+:func:`make_trace` so a single pytree schema flows through metrics,
+benchmarks, and :class:`repro.core.session.PotSession`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tstore import TStore
+from repro.core.txn import TxnBatch
+
+# Transaction modes (paper §2.2.3), shared by every engine's trace.
+MODE_UNSET, MODE_SPEC, MODE_PREFIX, MODE_FAST = 0, 1, 2, 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ExecTrace:
+    """Canonical per-execution trace — the superset of every engine's
+    bookkeeping, one pytree schema for all of them.
+
+    Per-transaction arrays are indexed by *txn index* (storage order),
+    not sequence position.  Fields an engine does not track are left at
+    their :func:`make_trace` defaults.
+    """
+
+    commit_round: jax.Array  # (K,) int32 — engine round/wave of commit
+    commit_pos: jax.Array    # (K,) int32 — global commit position (0-based)
+    first_round: jax.Array   # (K,) int32 — round of first speculative exec
+    retries: jax.Array       # (K,) int32 — re-executions (aborts)
+    mode: jax.Array          # (K,) int32 — MODE_FAST / MODE_PREFIX / MODE_SPEC
+    wait_rounds: jax.Array   # (K,) int32 — rounds executed-but-waiting
+    rounds: jax.Array        # ()   int32 — total engine rounds (OCC: waves)
+    exec_ops: jax.Array      # ()   int32 — instruction slots incl. retries
+    validation_words: jax.Array  # () int32 — read-set words validated
+    promotions: jax.Array    # ()   int32 — live promotions (§2.2.3, PCC)
+    barrier_ops: jax.Array   # ()   int32 — barrier idle slots (DeSTM)
+
+    @property
+    def n_txns(self) -> int:
+        return self.commit_round.shape[0]
+
+    @property
+    def waves(self) -> jax.Array:
+        """OCC-era name for :attr:`rounds` (kept for compatibility)."""
+        return self.rounds
+
+
+def make_trace(k: int, **overrides) -> ExecTrace:
+    """An ExecTrace with every field defaulted; engines override what
+    they actually track."""
+    fields = dict(
+        commit_round=jnp.full((k,), -1, jnp.int32),
+        commit_pos=jnp.full((k,), -1, jnp.int32),
+        first_round=jnp.zeros((k,), jnp.int32),
+        retries=jnp.zeros((k,), jnp.int32),
+        mode=jnp.zeros((k,), jnp.int32),
+        wait_rounds=jnp.zeros((k,), jnp.int32),
+        rounds=jnp.zeros((), jnp.int32),
+        exec_ops=jnp.zeros((), jnp.int32),
+        validation_words=jnp.zeros((), jnp.int32),
+        promotions=jnp.zeros((), jnp.int32),
+        barrier_ops=jnp.zeros((), jnp.int32),
+    )
+    fields.update(overrides)
+    return ExecTrace(**fields)
+
+
+def seq_rank(seq: jax.Array) -> jax.Array:
+    """(K,) sequence numbers -> (K,) 0-based rank of each txn in the
+    serialization order (= commit position for order-preserving engines)."""
+    return jnp.argsort(jnp.argsort(seq)).astype(jnp.int32)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What PotSession / benchmarks need from an engine."""
+
+    name: str
+
+    def execute(self, store: TStore, batch: TxnBatch, seq, *,
+                lanes=None, n_lanes: int = 1) -> tuple[TStore, ExecTrace]:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineDef:
+    """A registered engine: a raw (un-jitted) uniform-signature function
+    plus a cached jitted entry point.
+
+    ``raw(store, batch, seq, lanes, n_lanes)`` must be jit-compatible
+    with ``n_lanes`` static; :class:`~repro.core.session.PotSession`
+    re-jits it with donated store buffers.
+    """
+
+    name: str
+    raw: Callable[[TStore, TxnBatch, jax.Array, jax.Array, int],
+                  tuple[TStore, ExecTrace]]
+    doc: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "_jit", jax.jit(self.raw, static_argnums=(4,)))
+
+    def execute(self, store: TStore, batch: TxnBatch, seq, *,
+                lanes=None, n_lanes: int = 1) -> tuple[TStore, ExecTrace]:
+        if lanes is None:
+            lanes = jnp.zeros((batch.n_txns,), jnp.int32)
+        return self._jit(store, batch, jnp.asarray(seq, jnp.int32),
+                         jnp.asarray(lanes, jnp.int32), n_lanes)
+
+
+ENGINES: dict[str, EngineDef] = {}
+
+_ALIASES = {"pot": "pcc"}
+# module that registers each engine (for lazy standalone imports)
+_ENGINE_MODULES = {
+    "pcc": "repro.core.pcc",
+    "pogl": "repro.core.pogl",
+    "destm": "repro.core.destm",
+    "occ": "repro.core.occ",
+}
+
+
+def register_engine(engine: EngineDef) -> EngineDef:
+    ENGINES[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> EngineDef:
+    """Look up an engine by name ("pot" is an alias for "pcc")."""
+    key = _ALIASES.get(name, name)
+    if key not in ENGINES and key in _ENGINE_MODULES:
+        importlib.import_module(_ENGINE_MODULES[key])
+    if key not in ENGINES:
+        known = sorted(set(ENGINES) | set(_ALIASES))
+        raise KeyError(f"unknown engine {name!r}; known engines: {known}")
+    return ENGINES[key]

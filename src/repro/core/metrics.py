@@ -58,8 +58,29 @@ def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
         + VALIDATE_COST * np.asarray(rn)
 
 
-def report_pcc(trace, batch, res_rn, res_wn) -> EngineReport:
-    from repro.core.pcc import MODE_FAST, MODE_PREFIX
+def report_from_trace(name: str, trace, batch, res_rn, res_wn,
+                      n_lanes: int = 1) -> EngineReport:
+    """Build an EngineReport from the canonical ExecTrace of any engine.
+
+    ``name`` picks the engine's cost structure ("pot"/"pcc", "pogl",
+    "destm", "occ") — the *schema* is shared, the cost model is not:
+    e.g. only Pot has an uninstrumented fast path, only DeSTM pays round
+    barriers.
+    """
+    kind = {"pot": "pot", "pcc": "pot"}.get(name, name)
+    if kind == "pot":
+        return _report_pot(trace, batch, res_rn, res_wn)
+    if kind == "pogl":
+        return _report_pogl(batch, res_rn, res_wn)
+    if kind == "destm":
+        return _report_destm(trace, batch, res_rn, res_wn, n_lanes)
+    if kind == "occ":
+        return _report_occ(trace, batch, res_rn, res_wn)
+    raise KeyError(f"no report model for engine {name!r}")
+
+
+def _report_pot(trace, batch, res_rn, res_wn) -> EngineReport:
+    from repro.core.engine import MODE_FAST, MODE_PREFIX
     n_ins = np.asarray(batch.n_ins)
     commit_round = np.asarray(trace.commit_round)
     first_round = np.asarray(trace.first_round)
@@ -88,7 +109,7 @@ def report_pcc(trace, batch, res_rn, res_wn) -> EngineReport:
         throughput=k / cp if cp else float("inf"))
 
 
-def report_pogl(batch, res_rn, res_wn) -> EngineReport:
+def _report_pogl(batch, res_rn, res_wn) -> EngineReport:
     n_ins = np.asarray(batch.n_ins, dtype=np.float64)
     k = len(n_ins)
     cp = float(n_ins.sum())  # strictly serial, uninstrumented
@@ -98,7 +119,7 @@ def report_pogl(batch, res_rn, res_wn) -> EngineReport:
         throughput=k / cp if cp else float("inf"))
 
 
-def report_destm(trace, batch, res_rn, res_wn, n_lanes: int) -> EngineReport:
+def _report_destm(trace, batch, res_rn, res_wn, n_lanes: int) -> EngineReport:
     n_ins = np.asarray(batch.n_ins)
     commit_round = np.asarray(trace.commit_round)
     retries = np.asarray(trace.retries)
@@ -125,15 +146,14 @@ def report_destm(trace, batch, res_rn, res_wn, n_lanes: int) -> EngineReport:
         throughput=k / cp if cp else float("inf"))
 
 
-def report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
+def _report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
     n_ins = np.asarray(batch.n_ins)
     retries = np.asarray(trace.retries)
-    waves = int(trace.waves)
+    waves = int(trace.rounds)
     cost = _txn_cost(n_ins, res_rn, res_wn, fast=False)
     cp = 0.0
-    commit_wave = np.zeros(len(n_ins), np.int64)
     # txn committed in wave = retries (it retried that many waves)
-    commit_wave = retries
+    commit_wave = np.asarray(trace.commit_round)
     for w in range(waves):
         in_flight = commit_wave >= w
         if in_flight.any():
@@ -144,3 +164,20 @@ def report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
         critical_path=cp, total_wait_rounds=0, retries=int(retries.sum()),
         fast_commits=0, prefix_commits=0,
         throughput=k / cp if cp else float("inf"))
+
+
+# -- deprecated per-engine entry points (pre-ExecTrace API) ---------------
+def report_pcc(trace, batch, res_rn, res_wn) -> EngineReport:
+    return report_from_trace("pot", trace, batch, res_rn, res_wn)
+
+
+def report_pogl(batch, res_rn, res_wn) -> EngineReport:
+    return report_from_trace("pogl", None, batch, res_rn, res_wn)
+
+
+def report_destm(trace, batch, res_rn, res_wn, n_lanes: int) -> EngineReport:
+    return report_from_trace("destm", trace, batch, res_rn, res_wn, n_lanes)
+
+
+def report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
+    return report_from_trace("occ", trace, batch, res_rn, res_wn)

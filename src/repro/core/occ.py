@@ -15,29 +15,21 @@ the commit order so it can be replayed through ``ReplaySequencer``
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import protocol
+from repro.core.engine import (EngineDef, ExecTrace, make_trace,
+                               register_engine)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, run_all
 
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class OccTrace:
-    commit_pos: jax.Array   # (K,) int32 — global commit position (0-based)
-    retries: jax.Array      # (K,) int32
-    waves: jax.Array        # ()   int32 — parallel commit waves
-    exec_ops: jax.Array     # ()   int32
+# The old per-engine trace dataclass is now the canonical schema.
+OccTrace = ExecTrace
 
 
-@functools.partial(jax.jit, static_argnames=("max_waves",))
-def occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
-                max_waves: int | None = None) -> tuple[TStore, OccTrace]:
+def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
+                 max_waves: int | None = None) -> tuple[TStore, ExecTrace]:
     """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th."""
     k = batch.n_txns
     n_obj = store.n_objects
@@ -109,6 +101,25 @@ def occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
         (store.values, store.versions, jnp.zeros((k,), bool),
          jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), tr0))
 
-    trace = OccTrace(commit_pos=tr["commit_pos"], retries=tr["retries"],
-                     waves=wave, exec_ops=tr["exec_ops"])
+    trace = make_trace(
+        k,
+        commit_pos=tr["commit_pos"], retries=tr["retries"],
+        rounds=wave, exec_ops=tr["exec_ops"],
+        # a txn that retried r waves committed in wave r
+        commit_round=tr["retries"])
     return TStore(values=values, versions=versions, gv=store.gv + n_comm), trace
+
+
+occ_execute = jax.jit(_occ_execute, static_argnames=("max_waves",))
+
+
+def _occ_raw(store, batch, seq, lanes, n_lanes):
+    del lanes, n_lanes
+    # OCC has no preordering: the sequence order IS the arrival
+    # interleaving — the runtime-dependent knob its outcome depends on.
+    return _occ_execute(store, batch, jnp.argsort(seq))
+
+
+register_engine(EngineDef(
+    "occ", _occ_raw,
+    doc="traditional OCC baseline — commit order = arrival interleaving"))

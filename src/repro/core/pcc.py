@@ -38,40 +38,23 @@ output is invariant to it.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import protocol
+from repro.core.engine import (MODE_FAST, MODE_PREFIX, MODE_SPEC, MODE_UNSET,
+                               EngineDef, ExecTrace, make_trace,
+                               register_engine, seq_rank)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, TxnResult, run_all, run_txn
 
-MODE_UNSET, MODE_SPEC, MODE_PREFIX, MODE_FAST = 0, 1, 2, 3
+# The old per-engine trace dataclass is now the canonical schema.
+PccTrace = ExecTrace
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class PccTrace:
-    """Per-transaction trace (indexed by txn index, not seq position)."""
-
-    commit_round: jax.Array  # (K,) int32 — engine round where txn committed
-    first_round: jax.Array   # (K,) int32 — round of first speculative exec
-    retries: jax.Array       # (K,) int32 — re-executions (aborts)
-    mode: jax.Array          # (K,) int32 — MODE_FAST / MODE_PREFIX / MODE_SPEC
-    wait_rounds: jax.Array   # (K,) int32 — rounds spent executed-but-waiting
-    rounds: jax.Array        # ()   int32 — total engine rounds
-    validation_words: jax.Array  # () int32 — total read-set words validated
-    exec_ops: jax.Array      # ()   int32 — total instructions executed (incl. retries)
-    promotions: jax.Array    # ()   int32 — live promotions (§2.2.3)
-
-
-@functools.partial(jax.jit, static_argnames=("max_rounds",
-                                              "live_promotion"))
-def pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
-                max_rounds: int | None = None,
-                live_promotion: bool = True) -> tuple[TStore, PccTrace]:
+def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
+                 max_rounds: int | None = None,
+                 live_promotion: bool = True) -> tuple[TStore, ExecTrace]:
     """Execute a batch of preordered transactions under PCC.
 
     Args:
@@ -218,10 +201,27 @@ def pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         (store.values, store.versions, store.gv, jnp.zeros((), jnp.int32),
          jnp.zeros((), jnp.int32), tr0))
 
-    trace = PccTrace(
+    trace = make_trace(
+        k,
         commit_round=tr["commit_round"], first_round=tr["first_round"],
         retries=tr["retries"], mode=tr["mode"],
         wait_rounds=tr["wait_rounds"], rounds=rnd,
         validation_words=tr["validation_words"], exec_ops=tr["exec_ops"],
-        promotions=tr["promotions"])
+        promotions=tr["promotions"],
+        # PCC commits in sequence order: position = rank in the order
+        commit_pos=seq_rank(seq))
     return TStore(values=values, versions=versions, gv=gv), trace
+
+
+pcc_execute = jax.jit(
+    _pcc_execute, static_argnames=("max_rounds", "live_promotion"))
+
+
+def _pcc_raw(store, batch, seq, lanes, n_lanes):
+    del lanes, n_lanes  # PCC has no lane structure
+    return _pcc_execute(store, batch, seq)
+
+
+register_engine(EngineDef(
+    "pcc", _pcc_raw,
+    doc="Pot Concurrency Control — ordered prefix commit + live promotion"))

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import protocol
+from repro.core.engine import (MODE_FAST, EngineDef, make_trace,
+                               register_engine, seq_rank)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, run_txn
 
@@ -36,3 +38,21 @@ def pogl_execute(store: TStore, batch: TxnBatch, seq: jax.Array) -> TStore:
     (values, versions), _ = jax.lax.scan(
         step, (store.values, store.versions), jnp.arange(k))
     return TStore(values=values, versions=versions, gv=store.gv + k)
+
+
+def _pogl_raw(store, batch, seq, lanes, n_lanes):
+    del lanes, n_lanes
+    k = batch.n_txns
+    rank = seq_rank(seq)
+    # one txn per serial "round", uninstrumented (global lock = fast path)
+    trace = make_trace(
+        k, commit_round=rank, commit_pos=rank, first_round=rank,
+        mode=jnp.full((k,), MODE_FAST, jnp.int32),
+        rounds=jnp.asarray(k, jnp.int32),
+        exec_ops=batch.n_ins.sum(dtype=jnp.int32))
+    return pogl_execute(store, batch, seq), trace
+
+
+register_engine(EngineDef(
+    "pogl", _pogl_raw,
+    doc="Preordered Global Lock — strictly serial in sequence order"))

@@ -89,8 +89,20 @@ class RoundRobinSequencer:
             self._next_sn += 1
 
     def get_seq_no(self, lane_id: int) -> int:
-        """Next sequence number for this lane (paper's ``get-seq-no(tid)``)."""
+        """Next sequence number for this lane (paper's ``get-seq-no(tid)``).
+
+        Raises instead of spinning forever for a lane the refill loop
+        will never feed (unknown, or already stopped).
+        """
+        if lane_id not in self.lanes:
+            raise KeyError(
+                f"unknown lane {lane_id!r}: spawn_lane() it (or raise "
+                f"n_root_lanes) before sequencing transactions on it")
         while not self._pending.get(lane_id):
+            if not self.lanes[lane_id].alive:
+                raise RuntimeError(
+                    f"lane {lane_id} is stopped and has no pending "
+                    f"sequence numbers")
             self._refill()
         return self._pending[lane_id].pop(0)
 
@@ -101,21 +113,48 @@ class RoundRobinSequencer:
 
 
 class ReplaySequencer:
-    """Feed a previously recorded commit order back in (record/replay)."""
+    """Feed a previously recorded commit order back in (record/replay).
+
+    The log may span a whole *stream* of batches (as recorded by
+    ``PotSession.replay_log()``): entries are global 0-based txn ids in
+    commit order, and each ``order_for`` call consumes the next batch's
+    worth of entries, converting global ids to batch-local positions.
+    For a single batch this degenerates to the classic "recorded_order[i]
+    = txn index that committed i-th" form.  A stream shorter than the
+    log leaves entries unconsumed — check :attr:`remaining` (0 after a
+    complete replay) to detect a partial replay.
+    """
 
     def __init__(self, recorded_order: Iterable[int]):
-        # recorded_order[i] = txn index that committed i-th
-        self._order = list(recorded_order)
+        self._order = [int(t) for t in recorded_order]
+        self._consumed = 0   # log entries already replayed
+        self._offset = 0     # txns seen so far (global -> local ids)
+
+    @property
+    def remaining(self) -> int:
+        """Log entries not yet replayed (0 once the stream is complete)."""
+        return len(self._order) - self._consumed
 
     def order_for(self, txn_lanes: Iterable[int]) -> np.ndarray:
         lanes = list(txn_lanes)
-        if len(lanes) != len(self._order):
+        k = len(lanes)
+        if self.remaining < k:
             raise ValueError(
-                f"replay log has {len(self._order)} transactions, "
-                f"batch has {len(lanes)}")
-        seq = np.empty(len(lanes), np.int64)
-        for pos, txn_idx in enumerate(self._order):
-            seq[txn_idx] = pos + 1
+                f"replay log has {self.remaining} transactions left, "
+                f"batch has {k}")
+        chunk = self._order[self._consumed:self._consumed + k]
+        local = [t - self._offset for t in chunk]
+        if sorted(local) != list(range(k)):
+            raise ValueError(
+                f"replay log entries {chunk!r} are not a permutation of "
+                f"this batch's transactions "
+                f"[{self._offset}..{self._offset + k - 1}]")
+        seq = np.empty(k, np.int64)
+        for pos, txn_idx in enumerate(local):
+            # keep sequence numbers globally increasing across the stream
+            seq[txn_idx] = self._offset + pos + 1
+        self._consumed += k
+        self._offset += k
         return seq
 
 
@@ -143,6 +182,4 @@ class ExplicitSequencer:
 def seq_to_order(seq: np.ndarray) -> np.ndarray:
     """(K,) 1-based sequence numbers -> (K,) permutation: order[p] = txn
     index holding sequence position p+1."""
-    order = np.empty_like(seq)
-    order[np.argsort(seq, kind="stable")] = np.arange(len(seq))
     return np.argsort(seq, kind="stable")

@@ -1,0 +1,164 @@
+"""PotSession — the streaming execution layer over the unified engine API.
+
+A session owns the three pieces Pot threads through time:
+
+- the **store** (committed TStore image + ``gv``), carried across batches
+  so a stream of batches behaves like one long preordered history;
+- the **sequencer**, which keeps assigning globally increasing sequence
+  numbers (round-robin over lanes by default, or any sequencer from
+  :mod:`repro.core.sequencer`);
+- a **cached jitted step** for its engine, with the incoming store
+  buffers *donated* — on accelerators the committed image is updated in
+  place instead of copied every batch.
+
+Usage::
+
+    session = PotSession(n_objects=1024, engine="pcc", n_lanes=8)
+    for batch in batches:
+        trace = session.submit(batch, lanes)       # one ExecTrace each
+    session.fingerprint()                          # determinism check
+    log = session.replay_log()                     # global commit order
+
+The recorded log feeds straight back into a new session for
+record/replay debugging (paper §2.1)::
+
+    replay = PotSession(n_objects=1024, engine="pcc",
+                        sequencer=session.replay_sequencer())
+    replay.run_stream(batches)                     # bitwise-identical
+
+Every engine runs through the same ``submit`` — there is no per-engine
+signature anywhere above this layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineDef, ExecTrace, get_engine
+from repro.core.sequencer import ReplaySequencer, RoundRobinSequencer
+from repro.core.tstore import TStore, make_store
+from repro.core.tstore import fingerprint as store_fingerprint
+from repro.core.txn import TxnBatch
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(engine_name: str, donate: bool):
+    """One compiled step per (engine, donation) — shared by all sessions
+    so repeated sessions reuse compilation caches."""
+    eng = get_engine(engine_name)
+    return jax.jit(eng.raw, static_argnums=(4,),
+                   donate_argnums=(0,) if donate else ())
+
+
+class PotSession:
+    """Deterministic transactional execution over a stream of batches.
+
+    Args:
+      n_objects: size of a fresh store (ignored if ``store`` is given).
+      slot / init: forwarded to :func:`make_store` for the fresh store.
+      store: an existing TStore to adopt.  The session takes ownership:
+        with ``donate=True`` its buffers are consumed by the first step.
+      engine: engine name (``"pcc"`` / ``"pogl"`` / ``"destm"`` /
+        ``"occ"``, ``"pot"`` aliases ``"pcc"``) or an
+        :class:`~repro.core.engine.EngineDef`.
+      sequencer: any object with ``order_for(keys) -> (K,) seq numbers``;
+        defaults to a ``RoundRobinSequencer`` over ``n_lanes`` lanes.
+      n_lanes: lane count (round-robin width, DeSTM round width).
+      donate: donate the store buffers to the jitted step (in-place
+        update on backends that support it).
+    """
+
+    def __init__(self, n_objects: int | None = None, *, slot: int = 1,
+                 init=None, store: TStore | None = None,
+                 engine: str | EngineDef = "pcc", sequencer=None,
+                 n_lanes: int = 1, donate: bool = True):
+        if store is None:
+            if n_objects is None:
+                raise ValueError("PotSession needs n_objects or store")
+            store = make_store(n_objects, slot=slot, init=init)
+        self.store = store
+        self.engine = engine if isinstance(engine, EngineDef) \
+            else get_engine(engine)
+        self.n_lanes = n_lanes
+        self.sequencer = sequencer if sequencer is not None \
+            else RoundRobinSequencer(n_root_lanes=n_lanes)
+        self._step = _jitted_step(self.engine.name, donate)
+        self.traces: list[ExecTrace] = []
+        self._log: list[int] = []
+        self._n_txns = 0
+
+    # ------------------------------------------------------------- stream
+    def submit(self, batch: TxnBatch, lanes: Sequence | None = None
+               ) -> ExecTrace:
+        """Sequence and execute one batch against the session store.
+
+        ``lanes`` is the per-txn sequencing key — lane ids for the
+        round-robin sequencer, txn names for an ``ExplicitSequencer``,
+        ignored by a ``ReplaySequencer``.  Defaults to one lane.
+        """
+        k = batch.n_txns
+        keys = list(lanes) if lanes is not None else [0] * k
+        if len(keys) != k:
+            raise ValueError(f"batch has {k} txns, got {len(keys)} lanes")
+        seq = np.asarray(self.sequencer.order_for(keys), np.int64)
+        lane_ids = self._lane_ids(keys)
+        self.store, trace = self._step(
+            self.store, batch, jnp.asarray(seq, jnp.int32),
+            jnp.asarray(lane_ids, jnp.int32), self.n_lanes)
+        # record the commit order as global txn ids (replay_log schema)
+        order = np.argsort(np.asarray(trace.commit_pos), kind="stable")
+        self._log.extend(int(t) + self._n_txns for t in order)
+        self._n_txns += k
+        self.traces.append(trace)
+        return trace
+
+    def run_stream(self, batches: Iterable[TxnBatch],
+                   lanes: Sequence[Sequence] | None = None
+                   ) -> list[ExecTrace]:
+        """Submit a whole stream of batches; returns one trace each."""
+        batches = list(batches)
+        lanes_list = list(lanes) if lanes is not None \
+            else [None] * len(batches)
+        if len(lanes_list) != len(batches):
+            raise ValueError(
+                f"{len(batches)} batches but {len(lanes_list)} lane lists")
+        return [self.submit(b, l) for b, l in zip(batches, lanes_list)]
+
+    def _lane_ids(self, keys) -> np.ndarray:
+        """Engine-facing lane array: numeric keys mod n_lanes; symbolic
+        sequencing keys (e.g. ExplicitSequencer names) map to lane 0."""
+        try:
+            ids = np.asarray(keys, dtype=np.int64)
+        except (TypeError, ValueError):
+            return np.zeros((len(keys),), np.int64)
+        return ids % max(self.n_lanes, 1)
+
+    # ------------------------------------------------------ introspection
+    @property
+    def n_txns(self) -> int:
+        """Transactions committed by this session so far."""
+        return self._n_txns
+
+    @property
+    def gv(self) -> int:
+        """Global version = sequence number of the last commit."""
+        return int(self.store.gv)
+
+    def fingerprint(self) -> int:
+        """Order-sensitive hash of the committed store image."""
+        return int(store_fingerprint(self.store))
+
+    def replay_log(self) -> list[int]:
+        """Global commit order across the whole stream: entry i is the
+        global txn id (batch offset + index) that committed i-th."""
+        return list(self._log)
+
+    def replay_sequencer(self) -> ReplaySequencer:
+        """A sequencer that replays this session's commit order — feed it
+        to a fresh ``PotSession`` with the same batches (paper §2.1)."""
+        return ReplaySequencer(self._log)

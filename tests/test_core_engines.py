@@ -11,7 +11,8 @@ The central properties (DESIGN.md §8):
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (MODE_FAST, MODE_PREFIX, NOP, READ, RMW, WRITE,
                         ExplicitSequencer, ReplaySequencer,

@@ -1,0 +1,230 @@
+"""Tests for the unified engine API: PotSession + engine registry +
+canonical ExecTrace (the streaming layer over the Pot pipeline).
+
+Properties:
+  S1  Every engine runs through get_engine(name) / PotSession with the
+      same submit() signature and returns the shared ExecTrace schema.
+  S2  A multi-batch run_stream is bitwise-equal to the PoGL serial
+      oracle and invariant to per-batch arrival (storage) permutations.
+  S3  A recorded OCC commit order round-trips through ReplaySequencer +
+      PotSession, reproducing the OCC store exactly.
+  S4  ExplicitSequencer error paths (hang detection) surface through the
+      session; ReplaySequencer validates its stream log.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ENGINES, ExecTrace, ExplicitSequencer, PotSession,
+                        READ, ReplaySequencer, RMW, RoundRobinSequencer,
+                        WRITE, get_engine, make_batch, make_store,
+                        pogl_execute)
+from repro.core import workloads as W
+
+ALL_ENGINES = ("pcc", "pogl", "destm", "occ")
+N_OBJECTS, N_LANES = 64, 4
+
+
+def _stream(seeds=(1, 2, 3)):
+    """A stream of same-shaped workload batches sharing one lane layout."""
+    wls = [W.counters(n_txns=12, n_objects=N_OBJECTS, n_reads=2, n_writes=2,
+                      n_lanes=N_LANES, skew=0.8, seed=s) for s in seeds]
+    return [w.batch for w in wls], wls[0].lanes.tolist()
+
+
+# ------------------------------------------------------- registry (S1)
+def test_registry_knows_all_engines():
+    for name in ALL_ENGINES:
+        assert get_engine(name).name == name
+        assert name in ENGINES
+    assert get_engine("pot") is get_engine("pcc")  # paper-name alias
+    with pytest.raises(KeyError, match="unknown engine"):
+        get_engine("2pl")
+
+
+def test_every_engine_same_call_same_schema():
+    batches, lanes = _stream(seeds=(7,))
+    fps = {}
+    for name in ALL_ENGINES:
+        s = PotSession(N_OBJECTS, engine=name, n_lanes=N_LANES)
+        trace = s.submit(batches[0], lanes)
+        assert isinstance(trace, ExecTrace)
+        assert trace.n_txns == batches[0].n_txns
+        # commit_pos is a permutation for every engine (all txns commit)
+        assert sorted(np.asarray(trace.commit_pos).tolist()) == \
+            list(range(batches[0].n_txns))
+        assert s.gv == batches[0].n_txns
+        fps[name] = s.fingerprint()
+    # the three deterministic order-preserving engines agree bitwise
+    assert fps["pcc"] == fps["pogl"] == fps["destm"]
+
+
+def test_engine_execute_entry_point():
+    """get_engine(name).execute — the non-session unified entry point."""
+    batches, _ = _stream(seeds=(11,))
+    batch = batches[0]
+    k = batch.n_txns
+    store = make_store(N_OBJECTS)
+    seq = jnp.arange(1, k + 1, dtype=jnp.int32)
+    oracle = pogl_execute(store, batch, seq)
+    for name in ("pcc", "destm"):
+        out, trace = get_engine(name).execute(
+            store, batch, seq, lanes=np.arange(k) % N_LANES,
+            n_lanes=N_LANES)
+        np.testing.assert_array_equal(np.asarray(out.values),
+                                      np.asarray(oracle.values))
+        assert int(trace.rounds) <= k
+
+
+# ------------------------------------------- stream determinism (S2)
+def test_run_stream_matches_pogl_oracle():
+    batches, lanes = _stream()
+    pot = PotSession(N_OBJECTS, engine="pcc", n_lanes=N_LANES)
+    traces = pot.run_stream(batches, [lanes] * len(batches))
+    assert len(traces) == len(batches)
+    oracle = PotSession(N_OBJECTS, engine="pogl", n_lanes=N_LANES)
+    oracle.run_stream(batches, [lanes] * len(batches))
+    np.testing.assert_array_equal(np.asarray(pot.store.values),
+                                  np.asarray(oracle.store.values))
+    assert pot.fingerprint() == oracle.fingerprint()
+    # gv accumulates across the stream
+    assert pot.gv == sum(b.n_txns for b in batches)
+    assert pot.replay_log() == oracle.replay_log()
+
+
+def test_run_stream_invariant_to_per_batch_arrival_permutation():
+    """Permuting each batch's storage order (the arrival interleaving)
+    while replaying the same logical commit order is bitwise-invariant
+    and equals the PoGL oracle."""
+    batches, lanes = _stream()
+    base = PotSession(N_OBJECTS, engine="pcc", n_lanes=N_LANES)
+    base.run_stream(batches, [lanes] * len(batches))
+    log = base.replay_log()
+
+    rng = np.random.default_rng(0)
+    for trial in range(3):
+        permuted, mapped_log, offset = [], [], 0
+        for i, batch in enumerate(batches):
+            k = batch.n_txns
+            perm = rng.permutation(k)
+            inv = np.argsort(perm)
+            permuted.append(jax.tree.map(lambda a: a[perm], batch))
+            # same logical order, expressed in permuted storage indices
+            chunk = log[offset:offset + k]
+            mapped_log.extend(offset + int(inv[t - offset]) for t in chunk)
+            offset += k
+        s = PotSession(N_OBJECTS, engine="pcc",
+                       sequencer=ReplaySequencer(mapped_log))
+        s.run_stream(permuted)
+        np.testing.assert_array_equal(np.asarray(s.store.values),
+                                      np.asarray(base.store.values))
+        assert s.fingerprint() == base.fingerprint()
+
+
+# --------------------------------------------- record/replay (S3)
+def test_replay_sequencer_roundtrips_occ_commit_order():
+    batches, lanes = _stream()
+    # nondeterministic arrival interleavings per batch, as a flat log
+    rng = np.random.default_rng(42)
+    arrivals, offset = [], 0
+    for b in batches:
+        arrivals.extend(offset + int(t) for t in rng.permutation(b.n_txns))
+        offset += b.n_txns
+    occ = PotSession(N_OBJECTS, engine="occ",
+                     sequencer=ReplaySequencer(arrivals))
+    occ.run_stream(batches)
+    # replay the *recorded commit order* (not the arrival!) through Pot
+    replay = PotSession(N_OBJECTS, engine="pcc",
+                        sequencer=occ.replay_sequencer())
+    replay.run_stream(batches)
+    np.testing.assert_array_equal(np.asarray(replay.store.values),
+                                  np.asarray(occ.store.values))
+    assert replay.fingerprint() == occ.fingerprint()
+
+
+def test_destm_replay_log_is_round_major():
+    """DeSTM's serialization is round-major (one txn per lane per round),
+    not plain sequence order when lanes are unevenly loaded; the session
+    log must record the order DeSTM actually committed in, so replaying
+    it through Pot reproduces the DeSTM store."""
+    progs = [
+        [(RMW, 0, False, 1)],                        # T0  lane 0, seq 1
+        [(READ, 5, False, 0), (WRITE, 1, False, 0)],  # T1  lane 0, seq 2
+        [(WRITE, 5, False, 99)],                     # T2  lane 1, seq 3
+    ]
+    batch = make_batch(progs)
+    destm = PotSession(8, engine="destm", n_lanes=2,
+                       sequencer=ReplaySequencer([0, 1, 2]))
+    destm.submit(batch, lanes=[0, 0, 1])
+    # round 1 commits T0 (lane 0) and T2 (lane 1); T1 waits for round 2
+    # and therefore observes T2's write — commit order is [0, 2, 1]
+    assert destm.replay_log() == [0, 2, 1]
+    assert int(destm.store.values[1, 0]) == 99
+    replay = PotSession(8, engine="pcc",
+                        sequencer=destm.replay_sequencer())
+    replay.submit(batch)
+    np.testing.assert_array_equal(np.asarray(replay.store.values),
+                                  np.asarray(destm.store.values))
+
+
+def test_occ_stream_depends_on_arrival_witness():
+    """The baseline stays nondeterministic through the session API."""
+    wl = W.counters(n_txns=16, n_objects=8, n_reads=2, n_writes=2,
+                    n_lanes=4, skew=0.0, seed=12)
+    fps = set()
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        s = PotSession(wl.n_objects, engine="occ",
+                       sequencer=ReplaySequencer(
+                           rng.permutation(wl.batch.n_txns).tolist()))
+        s.submit(wl.batch)
+        fps.add(s.fingerprint())
+    assert len(fps) > 1
+
+
+# ----------------------------------------------- error paths (S4)
+def test_explicit_sequencer_hang_detection_through_session():
+    batch = make_batch([[(RMW, 0, False, 1)], [(RMW, 1, False, 1)]])
+    s = PotSession(4, sequencer=ExplicitSequencer(["init", "use", "close"]))
+    with pytest.raises(RuntimeError, match="waits forever"):
+        s.submit(batch, lanes=["init", "use"])  # "close" never arrives
+    s2 = PotSession(4, sequencer=ExplicitSequencer(["init"]))
+    with pytest.raises(RuntimeError, match="not in explicit order"):
+        s2.submit(batch, lanes=["init", "rogue"])
+    # named keys work when the order is complete (names -> lane 0)
+    s3 = PotSession(4, sequencer=ExplicitSequencer(["use", "init"]))
+    trace = s3.submit(batch, lanes=["init", "use"])
+    np.testing.assert_array_equal(np.asarray(trace.commit_pos), [1, 0])
+
+
+def test_replay_sequencer_stream_validation():
+    rs = ReplaySequencer([0, 1, 2])
+    with pytest.raises(ValueError, match="replay log has"):
+        rs.order_for([0, 0, 0, 0])  # log too short for the batch
+    rs2 = ReplaySequencer([0, 2])   # not a permutation of batch 0..1
+    with pytest.raises(ValueError, match="not a permutation"):
+        rs2.order_for([0, 0])
+
+
+def test_session_lane_count_mismatch():
+    batch = make_batch([[(RMW, 0, False, 1)]])
+    s = PotSession(4)
+    with pytest.raises(ValueError, match="lanes"):
+        s.submit(batch, lanes=[0, 1])
+
+
+def test_round_robin_unknown_or_stopped_lane_raises():
+    """The sequencer must raise, not spin forever, for a lane its refill
+    loop will never feed (paper §2.1's hang, surfaced as an error)."""
+    batch = make_batch([[(RMW, 0, False, 1)], [(RMW, 1, False, 1)]])
+    s = PotSession(8, engine="pcc", n_lanes=2)
+    with pytest.raises(KeyError, match="unknown lane"):
+        s.submit(batch, lanes=[0, 2])  # lane 2 was never spawned
+    seqr = RoundRobinSequencer(n_root_lanes=2)
+    assert seqr.get_seq_no(0) == 1
+    seqr.stop_lane(1)
+    assert seqr.get_seq_no(1) == 2  # pre-assigned number still drains
+    with pytest.raises(RuntimeError, match="stopped"):
+        seqr.get_seq_no(1)
