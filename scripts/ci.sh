@@ -1,7 +1,28 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [extra pytest args]
+#
+# --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
+# the test suite: it executes every engine through BOTH the preserved
+# legacy commit scans and the vectorized commit pipeline and asserts the
+# store fingerprints / commit positions agree bitwise, so perf refactors
+# of the commit machinery cannot silently diverge.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+
+BENCH_SMOKE=0
+PYTEST_ARGS=()
+for arg in "$@"; do
+  if [[ "$arg" == "--bench-smoke" ]]; then
+    BENCH_SMOKE=1
+  else
+    PYTEST_ARGS+=("$arg")
+  fi
+done
+
+python -m pytest -x -q "${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}"
+
+if [[ "$BENCH_SMOKE" == "1" ]]; then
+  python benchmarks/engine_bench.py --smoke
+fi

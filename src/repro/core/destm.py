@@ -9,6 +9,23 @@ round has started (Fig. 10a/10b).  A transaction that conflicts with an
 earlier commit of its round re-executes while holding the token (DeSTM
 requires deterministic conflicts).
 
+Vectorized round (shared commit pipeline, :mod:`repro.core.protocol`):
+round membership is a per-lane scatter-min (first pending position per
+lane) instead of a K-step pick scan; the round's ≤ n_lanes members are
+then *compacted* into an (n_lanes, L) block sorted by token order, and
+the token-order commit walk becomes a loop over *retry events* only:
+batched conflict checks find the first compact row that conflicts
+(against the accumulated actual writes plus the speculative writes of
+the clean block before it), the whole clean block lands in one fused
+scatter, and only the conflicting transaction re-executes serially
+while holding the token.  A round costs O(#retries) device steps on
+O(n_lanes·L)-sized operands instead of a K-step scan over O(n_objects)
+probes; a conflict-free round is entirely batched.  Decisions are
+bit-identical to the old scan (``repro.core.legacy_scan``): a clean
+commit's actual write set IS its speculative one, so the batched
+verdicts match the serial walk's exactly up to each retry, and the
+retry re-derives its write set serially just as before.
+
 Consequences the paper exploits and we measure:
 - a lane with n transactions needs >= n rounds even when nothing
   conflicts (Pot commits arbitrarily many per round);
@@ -21,12 +38,14 @@ differs, which is exactly the paper's Fig. 7/9/10 story.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import protocol
 from repro.core.engine import (EngineDef, ExecTrace, make_trace,
-                               register_engine, seq_rank)
+                               rank_from_order, register_engine, seq_rank)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, run_all, run_txn
 
@@ -34,6 +53,16 @@ from repro.core.txn import TxnBatch, run_all, run_txn
 # (barrier_ops — Σ_rounds Σ_lanes (max_cost - cost), the instruction-slots
 # lanes idle at round barriers — lives in the shared ExecTrace.)
 DestmTrace = ExecTrace
+
+
+class _CompactRes(NamedTuple):
+    """The footprint slice protocol.earlier_writer_conflicts needs, for
+    the round's compacted (n_lanes, L) member block."""
+
+    raddrs: jax.Array
+    rn: jax.Array
+    waddrs: jax.Array
+    wn: jax.Array
 
 
 def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
@@ -48,75 +77,103 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     k = batch.n_txns
     n_obj = store.n_objects
     order = jnp.argsort(seq)
+    rank = rank_from_order(order)
     gv0 = store.gv
+    lane_slot = jnp.arange(n_lanes)
 
     def round_body(state):
         values, versions, done, rnd, tr = state
 
-        # ---- round membership: first pending txn (in seq order) per lane
-        def pick(carry, p):
-            taken = carry          # (n_lanes,) bool — lane already has a txn
-            t = order[p]
-            lane = lanes[t]
-            sel = (~done[t]) & (~taken[lane])
-            taken = taken.at[lane].max(sel)
-            return taken, sel
+        # ---- round membership: first pending txn (in seq order) per lane,
+        # one scatter-min instead of a K-step pick scan
+        pending_t = ~done
+        first_per_lane = jnp.full((n_lanes,), k, jnp.int32).at[lanes].min(
+            jnp.where(pending_t, rank, k).astype(jnp.int32))
+        sel_t = pending_t & (first_per_lane[lanes] == rank)
 
-        _, selected_pos = jax.lax.scan(
-            pick, jnp.zeros((n_lanes,), bool), jnp.arange(k))
+        # ---- compact the round's members: (n_lanes,) rows sorted by
+        # token order (= ascending sequence position); empty lanes sit at
+        # the back with sentinel position k
+        sel_pos = jnp.sort(first_per_lane)            # (n_lanes,) positions
+        live = sel_pos < k
+        sel_txn = order[jnp.clip(sel_pos, 0, k - 1)]  # txn id per member
 
-        # ---- speculative execution against the round-start snapshot
+        # ---- speculative execution; footprints of the members only
         res = run_all(batch, values)
+        ra_c, rn_c = res.raddrs[sel_txn], res.rn[sel_txn]
+        wa_c, wv_c, wn_c = (res.waddrs[sel_txn], res.wvals[sel_txn],
+                            res.wn[sel_txn])
+        sn_c = gv0 + 1 + sel_pos                      # version stamps
 
-        # ---- token-order commits; conflicting txns re-execute serially
-        def commit_scan(carry, p):
-            values, versions, written, tr_retries, tr_exec = carry
-            t = order[p]
-            sel = selected_pos[p]
-            conflict = protocol.footprint_conflicts(
-                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+        # ---- token-order commits, one iteration per RETRY EVENT: commit
+        # the conflict-free block in one fused scatter, serially re-execute
+        # the first conflicting txn (token held), repeat on the rest.
+        # All operands are compact (n_lanes, L) — no O(K) work per event.
+        def token_cond(st):
+            return st[3].any()  # members remaining
 
-            def commit_clean(args):
-                values, versions, written = args
-                values, versions = protocol.apply_writes(
-                    values, versions, res.waddrs[t], res.wvals[t], res.wn[t],
-                    gv0 + p + 1)
-                written = protocol.mark_writes(written, res.waddrs[t],
-                                               res.wn[t])
-                return values, versions, written
+        def token_body(st):
+            values, versions, written, remaining, retried = st
+            # conflict vs committed-so-far actual writes (earlier token
+            # iterations) ...
+            accum_hit = jax.vmap(
+                protocol.footprint_conflicts, in_axes=(None, 0, 0, 0, 0))(
+                    written, ra_c, rn_c, wa_c, wn_c)
+            # ... or vs the speculative writes of remaining members ahead
+            # of us (they commit clean, so speculative = actual for them)
+            spec_hit = protocol.earlier_writer_conflicts(
+                _CompactRes(ra_c, rn_c, wa_c, wn_c), None, remaining,
+                lane_slot, n_obj)
+            bad = remaining & (accum_hit | spec_hit)
+            f = jnp.min(jnp.where(bad, lane_slot, n_lanes))  # retry event
+            clean = remaining & (lane_slot < f)
+            values, versions = protocol.fused_write_back(
+                values, versions, wa_c, wv_c, wn_c, clean, lane_slot, sn_c)
+            slot = jnp.arange(wa_c.shape[1])
+            clean_slots = clean[:, None] & (slot[None, :] < wn_c[:, None])
+            written = written.at[
+                jnp.where(clean_slots, wa_c, n_obj).reshape(-1)].set(
+                    True, mode="drop")
 
-            def commit_retry(args):
+            def do_retry(args):
                 # token held: re-execute against committed state, commit.
                 # NB: mark the RETRY's write set — the speculative write
                 # set may differ (data-dependent addresses) and marking it
                 # would hide conflicts from later round members.
                 values, versions, written = args
-                row = jax.tree.map(lambda a: a[t], batch)
+                fc = jnp.clip(f, 0, n_lanes - 1)
+                row = jax.tree.map(lambda a: a[sel_txn[fc]], batch)
                 raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
                 del raddrs2, rn2
                 values, versions = protocol.apply_writes(
-                    values, versions, waddrs2, wvals2, wn2, gv0 + p + 1)
+                    values, versions, waddrs2, wvals2, wn2,
+                    gv0 + sel_pos[fc] + 1)
                 written = protocol.mark_writes(written, waddrs2, wn2)
                 return values, versions, written
 
             values, versions, written = jax.lax.cond(
-                sel,
-                lambda a: jax.lax.cond(conflict, commit_retry, commit_clean,
-                                       a),
-                lambda a: a, (values, versions, written))
-            tr_retries = tr_retries.at[t].add((sel & conflict).astype(jnp.int32))
-            tr_exec = tr_exec + jnp.where(
-                sel, batch.n_ins[t] * (1 + conflict.astype(jnp.int32)), 0)
-            return (values, versions, written, tr_retries, tr_exec), None
+                f < n_lanes, do_retry, lambda a: a,
+                (values, versions, written))
+            retried = retried | (lane_slot == f)    # empty when f == n_lanes
+            remaining = remaining & (lane_slot > f)
+            return values, versions, written, remaining, retried
 
-        (values, versions, _, retries, exec_ops), _ = jax.lax.scan(
-            commit_scan,
-            (values, versions, jnp.zeros((n_obj,), bool),
-             tr["retries"], tr["exec_ops"]),
-            jnp.arange(k))
+        values, versions, _, _, retried_c = jax.lax.while_loop(
+            token_cond, token_body,
+            (values, versions, jnp.zeros((n_obj,), bool), live,
+             jnp.zeros((n_lanes,), bool)))
+
+        # ---- trace bookkeeping: retry events scattered back to txn ids
+        # (live members have distinct txns, so add == set)
+        retried_t = jnp.zeros((k,), jnp.int32).at[
+            jnp.where(live, sel_txn, k)].add(
+                retried_c.astype(jnp.int32), mode="drop")
+        retries = tr["retries"] + retried_t
+        exec_ops = tr["exec_ops"] \
+            + jnp.where(sel_t, batch.n_ins, 0).sum(dtype=jnp.int32) \
+            + jnp.where(retried_t > 0, batch.n_ins, 0).sum(dtype=jnp.int32)
 
         # ---- barrier accounting: lanes idle until the slowest finishes
-        sel_t = jnp.zeros((k,), bool).at[order].set(selected_pos)
         cost = jnp.where(sel_t, batch.n_ins, 0)
         round_max = cost.max()
         n_sel = sel_t.sum(dtype=jnp.int32)
@@ -147,7 +204,6 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     # within a round the token order (= sequence order restricted to the
     # round's members) decides.  With uneven lane loads this is NOT the
     # plain sequence order, so commit_pos must rank (round, token) pairs.
-    rank = seq_rank(seq)
     commit_pos = seq_rank(tr["commit_round"] * (k + 1) + rank)
     trace = make_trace(
         k,

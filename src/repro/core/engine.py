@@ -99,10 +99,24 @@ def make_trace(k: int, **overrides) -> ExecTrace:
     return ExecTrace(**fields)
 
 
+def rank_from_order(order: jax.Array) -> jax.Array:
+    """Inverse permutation: rank[order[p]] = p.
+
+    Engines already compute ``order = argsort(seq)``; the rank is its
+    inverse, recovered with ONE scatter instead of a second argsort —
+    reuse this instead of re-deriving the rank from ``seq``.
+    """
+    k = order.shape[0]
+    return jnp.zeros((k,), jnp.int32).at[order].set(
+        jnp.arange(k, dtype=jnp.int32))
+
+
 def seq_rank(seq: jax.Array) -> jax.Array:
     """(K,) sequence numbers -> (K,) 0-based rank of each txn in the
-    serialization order (= commit position for order-preserving engines)."""
-    return jnp.argsort(jnp.argsort(seq)).astype(jnp.int32)
+    serialization order (= commit position for order-preserving engines).
+    One argsort + an inverse-permutation scatter (O(K log K) + O(K)); the
+    old double argsort sorted twice."""
+    return rank_from_order(jnp.argsort(seq))
 
 
 @runtime_checkable

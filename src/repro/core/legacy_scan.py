@@ -1,0 +1,360 @@
+"""Pre-PR2 scan-based commit machinery, preserved verbatim.
+
+These are the sequential reference implementations the vectorized commit
+pipeline (protocol.conflict_table / prefix_commit / wave_commit /
+fused_write_back) replaced: every round walks all K transactions through
+two `lax.scan`s — an O(n_objects) bitmap probe plus a `lax.cond`
+write-back per transaction.  They are kept (unregistered) for two jobs:
+
+* **equivalence**: tests/test_commit_pipeline.py asserts the new
+  pipeline's TStore image and ExecTrace commit_pos/mode/retries are
+  bit-identical to these scans on every workload;
+* **benchmarking**: benchmarks/engine_bench.py times old-vs-new and the
+  `--bench-smoke` CI stage cross-checks their store fingerprints.
+
+Do not "fix" or optimize this module — its value is being frozen.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.core.engine import (MODE_FAST, MODE_PREFIX, MODE_SPEC, MODE_UNSET,
+                               ExecTrace, make_trace, seq_rank)
+from repro.core.tstore import TStore
+from repro.core.txn import TxnBatch, TxnResult, run_all, run_txn
+
+
+def _pcc_execute_scan(store: TStore, batch: TxnBatch, seq: jax.Array,
+                      max_rounds: int | None = None,
+                      live_promotion: bool = True) -> tuple[TStore, ExecTrace]:
+    """Scan-based PCC round: per-txn validation probe + per-txn write-back."""
+    k = batch.n_txns
+    n_obj = store.n_objects
+    order = jnp.argsort(seq)  # order[p] = txn index at seq position p
+    gv0 = store.gv
+
+    def round_body(state):
+        values, versions, gv, n_comm, rnd, tr = state
+        res: TxnResult = run_all(batch, values)
+
+        # --- ordered commit: maximal non-conflicting in-order prefix -----
+        def commit_scan(carry, p):
+            written, alive = carry
+            t = order[p]
+            pending = p >= n_comm
+            conflict = protocol.footprint_conflicts(
+                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+            committing = alive & pending & ~conflict
+            written = jax.lax.cond(
+                committing,
+                lambda w: protocol.mark_writes(w, res.waddrs[t], res.wn[t]),
+                lambda w: w, written)
+            alive = alive & (committing | ~pending)
+            return (written, alive), committing
+
+        (_, _), committing_pos = jax.lax.scan(
+            commit_scan,
+            (jnp.zeros((n_obj,), bool), jnp.asarray(True)),
+            jnp.arange(k))
+
+        # --- write-back in sequence order --------------------------------
+        def apply_scan(carry, p):
+            vals, vers = carry
+            t = order[p]
+            sn = gv0 + p + 1
+
+            def do(args):
+                v, ve = args
+                return protocol.apply_writes(
+                    v, ve, res.waddrs[t], res.wvals[t], res.wn[t], sn)
+
+            vals, vers = jax.lax.cond(
+                committing_pos[p], do, lambda a: a, (vals, vers))
+            return (vals, vers), None
+
+        (values, versions), _ = jax.lax.scan(
+            apply_scan, (values, versions), jnp.arange(k))
+
+        n_new = committing_pos.sum(dtype=jnp.int32)
+        gv = gv + n_new
+
+        # ---- live promotion (paper §2.2.3)
+        promoted_pos = -jnp.ones((), jnp.int32)
+        if live_promotion:
+            head_pos = n_comm + n_new
+
+            def promote(args):
+                values, versions, gv = args
+                t = order[jnp.clip(head_pos, 0, k - 1)]
+                row = jax.tree.map(lambda a: a[t], batch)
+                raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
+                del raddrs2, rn2
+                values, versions = protocol.apply_writes(
+                    values, versions, waddrs2, wvals2, wn2,
+                    gv0 + head_pos + 1)
+                return values, versions, gv + 1
+
+            do_promote = head_pos < k
+            values, versions, gv = jax.lax.cond(
+                do_promote, promote, lambda a: a, (values, versions, gv))
+            promoted_pos = jnp.where(do_promote, head_pos, -1)
+            n_new = n_new + do_promote.astype(jnp.int32)
+
+        # --- trace bookkeeping (by txn index) ----------------------------
+        pos = jnp.arange(k)
+        pending_pos = pos >= n_comm
+        is_head = pos == n_comm
+        promoted_mask = pos == promoted_pos
+        committing_all = committing_pos | promoted_mask
+        mode_pos = jnp.where(
+            committing_all,
+            jnp.where(is_head | promoted_mask, MODE_FAST, MODE_PREFIX),
+            jnp.where(pending_pos, MODE_SPEC, MODE_UNSET))
+        commit_round = tr["commit_round"].at[order].max(
+            jnp.where(committing_all, rnd, -1))
+        first_round = tr["first_round"].at[order].min(
+            jnp.where(pending_pos, rnd, jnp.iinfo(jnp.int32).max))
+        retries = tr["retries"].at[order].add(
+            (pending_pos & ~committing_all).astype(jnp.int32))
+        mode = tr["mode"].at[order].max(mode_pos)
+        wait_rounds = tr["wait_rounds"].at[order].add(
+            (pending_pos & ~committing_all).astype(jnp.int32))
+        rn_pos = res.rn[order]
+        validation_words = tr["validation_words"] + jnp.where(
+            pending_pos & ~is_head, rn_pos, 0).sum(dtype=jnp.int32)
+        exec_ops = tr["exec_ops"] + jnp.where(
+            pending_pos, batch.n_ins[order], 0).sum(dtype=jnp.int32) \
+            + jnp.where(promoted_mask, batch.n_ins[order],
+                        0).sum(dtype=jnp.int32)
+        promotions = tr["promotions"] + promoted_mask.sum(dtype=jnp.int32)
+        tr = dict(tr, commit_round=commit_round, first_round=first_round,
+                  retries=retries, mode=mode, wait_rounds=wait_rounds,
+                  validation_words=validation_words, exec_ops=exec_ops,
+                  promotions=promotions)
+        return values, versions, gv, n_comm + n_new, rnd + 1, tr
+
+    def cond(state):
+        *_, n_comm, rnd, _ = state
+        return (n_comm < k) & (rnd < limit)
+
+    limit = max_rounds if max_rounds is not None else k + 1
+    tr0 = dict(
+        commit_round=jnp.full((k,), -1, jnp.int32),
+        first_round=jnp.full((k,), jnp.iinfo(jnp.int32).max, jnp.int32),
+        retries=jnp.zeros((k,), jnp.int32),
+        mode=jnp.zeros((k,), jnp.int32),
+        wait_rounds=jnp.zeros((k,), jnp.int32),
+        validation_words=jnp.zeros((), jnp.int32),
+        exec_ops=jnp.zeros((), jnp.int32),
+        promotions=jnp.zeros((), jnp.int32),
+    )
+    values, versions, gv, n_comm, rnd, tr = jax.lax.while_loop(
+        cond, round_body,
+        (store.values, store.versions, store.gv, jnp.zeros((), jnp.int32),
+         jnp.zeros((), jnp.int32), tr0))
+
+    trace = make_trace(
+        k,
+        commit_round=tr["commit_round"], first_round=tr["first_round"],
+        retries=tr["retries"], mode=tr["mode"],
+        wait_rounds=tr["wait_rounds"], rounds=rnd,
+        validation_words=tr["validation_words"], exec_ops=tr["exec_ops"],
+        promotions=tr["promotions"],
+        commit_pos=seq_rank(seq))
+    return TStore(values=values, versions=versions, gv=gv), trace
+
+
+def _occ_execute_scan(store: TStore, batch: TxnBatch, arrival: jax.Array,
+                      max_waves: int | None = None) -> tuple[TStore, ExecTrace]:
+    """Scan-based OCC wave: per-txn probe, arrival order, no prefix rule."""
+    k = batch.n_txns
+    n_obj = store.n_objects
+
+    def wave_body(state):
+        values, versions, done, n_comm, wave, tr = state
+        res = run_all(batch, values)
+
+        def commit_scan(carry, p):
+            written = carry
+            t = arrival[p]
+            pending = ~done[t]
+            conflict = protocol.footprint_conflicts(
+                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+            committing = pending & ~conflict   # NOTE: no prefix/order rule
+            written = jax.lax.cond(
+                committing,
+                lambda w: protocol.mark_writes(w, res.waddrs[t], res.wn[t]),
+                lambda w: w, written)
+            return written, committing
+
+        _, committing_pos = jax.lax.scan(
+            commit_scan, jnp.zeros((n_obj,), bool), jnp.arange(k))
+
+        commit_idx = n_comm + jnp.cumsum(committing_pos) - 1
+
+        def apply_scan(carry, p):
+            vals, vers = carry
+            t = arrival[p]
+
+            def do(args):
+                v, ve = args
+                return protocol.apply_writes(
+                    v, ve, res.waddrs[t], res.wvals[t], res.wn[t],
+                    commit_idx[p] + 1)
+
+            vals, vers = jax.lax.cond(
+                committing_pos[p], do, lambda a: a, (vals, vers))
+            return (vals, vers), None
+
+        (values, versions), _ = jax.lax.scan(
+            apply_scan, (values, versions), jnp.arange(k))
+
+        pending_t = ~done
+        commit_pos = tr["commit_pos"].at[arrival].max(
+            jnp.where(committing_pos, commit_idx, -1))
+        retries = tr["retries"] + (
+            pending_t & ~jnp.zeros_like(pending_t).at[arrival].set(
+                committing_pos)).astype(jnp.int32)
+        exec_ops = tr["exec_ops"] + jnp.where(
+            pending_t, batch.n_ins, 0).sum(dtype=jnp.int32)
+        done = done.at[arrival].max(committing_pos)
+        tr = dict(tr, commit_pos=commit_pos, retries=retries,
+                  exec_ops=exec_ops)
+        return (values, versions, done,
+                n_comm + committing_pos.sum(dtype=jnp.int32), wave + 1, tr)
+
+    def cond(state):
+        _, _, done, _, wave, _ = state
+        return (~done.all()) & (wave < limit)
+
+    limit = max_waves if max_waves is not None else k + 1
+    tr0 = dict(commit_pos=jnp.full((k,), -1, jnp.int32),
+               retries=jnp.zeros((k,), jnp.int32),
+               exec_ops=jnp.zeros((), jnp.int32))
+    values, versions, done, n_comm, wave, tr = jax.lax.while_loop(
+        cond, wave_body,
+        (store.values, store.versions, jnp.zeros((k,), bool),
+         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), tr0))
+
+    trace = make_trace(
+        k,
+        commit_pos=tr["commit_pos"], retries=tr["retries"],
+        rounds=wave, exec_ops=tr["exec_ops"],
+        commit_round=tr["retries"])
+    return TStore(values=values, versions=versions, gv=store.gv + n_comm), trace
+
+
+def _destm_execute_scan(store: TStore, batch: TxnBatch, seq: jax.Array,
+                        lanes: jax.Array, n_lanes: int,
+                        max_rounds: int | None = None
+                        ) -> tuple[TStore, ExecTrace]:
+    """Scan-based DeSTM round: per-lane pick scan + token-order commit scan."""
+    k = batch.n_txns
+    n_obj = store.n_objects
+    order = jnp.argsort(seq)
+    gv0 = store.gv
+
+    def round_body(state):
+        values, versions, done, rnd, tr = state
+
+        def pick(carry, p):
+            taken = carry          # (n_lanes,) bool — lane already has a txn
+            t = order[p]
+            lane = lanes[t]
+            sel = (~done[t]) & (~taken[lane])
+            taken = taken.at[lane].max(sel)
+            return taken, sel
+
+        _, selected_pos = jax.lax.scan(
+            pick, jnp.zeros((n_lanes,), bool), jnp.arange(k))
+
+        res = run_all(batch, values)
+
+        def commit_scan(carry, p):
+            values, versions, written, tr_retries, tr_exec = carry
+            t = order[p]
+            sel = selected_pos[p]
+            conflict = protocol.footprint_conflicts(
+                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
+
+            def commit_clean(args):
+                values, versions, written = args
+                values, versions = protocol.apply_writes(
+                    values, versions, res.waddrs[t], res.wvals[t], res.wn[t],
+                    gv0 + p + 1)
+                written = protocol.mark_writes(written, res.waddrs[t],
+                                               res.wn[t])
+                return values, versions, written
+
+            def commit_retry(args):
+                values, versions, written = args
+                row = jax.tree.map(lambda a: a[t], batch)
+                raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
+                del raddrs2, rn2
+                values, versions = protocol.apply_writes(
+                    values, versions, waddrs2, wvals2, wn2, gv0 + p + 1)
+                written = protocol.mark_writes(written, waddrs2, wn2)
+                return values, versions, written
+
+            values, versions, written = jax.lax.cond(
+                sel,
+                lambda a: jax.lax.cond(conflict, commit_retry, commit_clean,
+                                       a),
+                lambda a: a, (values, versions, written))
+            tr_retries = tr_retries.at[t].add((sel & conflict).astype(jnp.int32))
+            tr_exec = tr_exec + jnp.where(
+                sel, batch.n_ins[t] * (1 + conflict.astype(jnp.int32)), 0)
+            return (values, versions, written, tr_retries, tr_exec), None
+
+        (values, versions, _, retries, exec_ops), _ = jax.lax.scan(
+            commit_scan,
+            (values, versions, jnp.zeros((n_obj,), bool),
+             tr["retries"], tr["exec_ops"]),
+            jnp.arange(k))
+
+        sel_t = jnp.zeros((k,), bool).at[order].set(selected_pos)
+        cost = jnp.where(sel_t, batch.n_ins, 0)
+        round_max = cost.max()
+        n_sel = sel_t.sum(dtype=jnp.int32)
+        barrier_ops = tr["barrier_ops"] + jnp.where(
+            n_sel > 0, n_sel * round_max - cost.sum(dtype=jnp.int32), 0)
+
+        done = done | sel_t
+        commit_round = jnp.where(sel_t, rnd, tr["commit_round"])
+        tr = dict(tr, retries=retries, exec_ops=exec_ops,
+                  barrier_ops=barrier_ops, commit_round=commit_round)
+        return values, versions, done, rnd + 1, tr
+
+    def cond(state):
+        _, _, done, rnd, _ = state
+        return (~done.all()) & (rnd < limit)
+
+    limit = max_rounds if max_rounds is not None else k + 1
+    tr0 = dict(commit_round=jnp.full((k,), -1, jnp.int32),
+               retries=jnp.zeros((k,), jnp.int32),
+               exec_ops=jnp.zeros((), jnp.int32),
+               barrier_ops=jnp.zeros((), jnp.int32))
+    values, versions, done, rnd, tr = jax.lax.while_loop(
+        cond, round_body,
+        (store.values, store.versions, jnp.zeros((k,), bool),
+         jnp.zeros((), jnp.int32), tr0))
+
+    rank = seq_rank(seq)
+    commit_pos = seq_rank(tr["commit_round"] * (k + 1) + rank)
+    trace = make_trace(
+        k,
+        commit_round=tr["commit_round"], retries=tr["retries"],
+        rounds=rnd, exec_ops=tr["exec_ops"],
+        barrier_ops=tr["barrier_ops"],
+        first_round=tr["commit_round"], commit_pos=commit_pos)
+    return TStore(values=values, versions=versions, gv=store.gv + k), trace
+
+
+pcc_execute_scan = jax.jit(
+    _pcc_execute_scan, static_argnames=("max_rounds", "live_promotion"))
+occ_execute_scan = jax.jit(_occ_execute_scan, static_argnames=("max_waves",))
+destm_execute_scan = jax.jit(
+    _destm_execute_scan, static_argnames=("n_lanes", "max_rounds"))

@@ -6,6 +6,14 @@ model the interleaving with an explicit ``arrival`` permutation (which
 transaction reaches its validation/write phase first); the engine commits
 non-conflicting transactions in arrival-order waves.
 
+Each wave runs through the shared vectorized commit pipeline
+(:mod:`repro.core.protocol`): one K×K conflict matrix, then OCC's greedy
+arrival-order rule — commit iff no conflict with an earlier *committing*
+transaction, with NO prefix cutoff — solved as a masked mat-vec fixpoint
+(``protocol.wave_commit``; converges in the conflict-chain depth, one
+batched device step per iteration, exactly reproducing the old K-step
+commit scan), and one fused write-back scatter for the whole wave.
+
 The point this baseline exists to make (and the tests assert): the final
 store DEPENDS on ``arrival`` — different interleavings, different outcome
 — which is precisely the nondeterminism Pot eliminates.  It also records
@@ -20,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import protocol
 from repro.core.engine import (EngineDef, ExecTrace, make_trace,
-                               register_engine)
+                               rank_from_order, register_engine)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, run_all
 
@@ -33,60 +41,36 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
     """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th."""
     k = batch.n_txns
     n_obj = store.n_objects
+    # arrival rank of each txn: one argsort's inverse, computed once
+    rank = rank_from_order(arrival)
 
     def wave_body(state):
         values, versions, done, n_comm, wave, tr = state
         res = run_all(batch, values)
 
-        def commit_scan(carry, p):
-            written = carry
-            t = arrival[p]
-            pending = ~done[t]
-            conflict = protocol.footprint_conflicts(
-                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
-            committing = pending & ~conflict   # NOTE: no prefix/order rule
-            written = jax.lax.cond(
-                committing,
-                lambda w: protocol.mark_writes(w, res.waddrs[t], res.wn[t]),
-                lambda w: w, written)
-            return written, committing
-
-        _, committing_pos = jax.lax.scan(
-            commit_scan, jnp.zeros((n_obj,), bool), jnp.arange(k))
-
-        # write-back in arrival order; commit position = running count
-        commit_idx = n_comm + jnp.cumsum(committing_pos) - 1
-
-        def apply_scan(carry, p):
-            vals, vers = carry
-            t = arrival[p]
-
-            def do(args):
-                v, ve = args
-                return protocol.apply_writes(
-                    v, ve, res.waddrs[t], res.wvals[t], res.wn[t],
-                    commit_idx[p] + 1)
-
-            vals, vers = jax.lax.cond(
-                committing_pos[p], do, lambda a: a, (vals, vers))
-            return (vals, vers), None
-
-        (values, versions), _ = jax.lax.scan(
-            apply_scan, (values, versions), jnp.arange(k))
-
+        # --- batched conflict analysis + greedy wave fixpoint ------------
+        conflict = protocol.conflict_table(res, n_obj)
         pending_t = ~done
-        commit_pos = tr["commit_pos"].at[arrival].max(
-            jnp.where(committing_pos, commit_idx, -1))
-        retries = tr["retries"] + (
-            pending_t & ~jnp.zeros_like(pending_t).at[arrival].set(
-                committing_pos)).astype(jnp.int32)
+        committing_t = protocol.wave_commit(
+            res, conflict, pending_t, rank, n_obj)
+
+        # commit position = running count in arrival order; the cumsum
+        # lives in position space, gathered back through each txn's rank
+        commit_idx_t = n_comm + jnp.cumsum(committing_t[arrival])[rank] - 1
+        values, versions = protocol.fused_write_back(
+            values, versions, res.waddrs, res.wvals, res.wn,
+            committing_t, rank, commit_idx_t + 1)
+
+        commit_pos = jnp.maximum(tr["commit_pos"],
+                                 jnp.where(committing_t, commit_idx_t, -1))
+        retries = tr["retries"] + (pending_t & ~committing_t)
         exec_ops = tr["exec_ops"] + jnp.where(
             pending_t, batch.n_ins, 0).sum(dtype=jnp.int32)
-        done = done.at[arrival].max(committing_pos)
+        done = done | committing_t
         tr = dict(tr, commit_pos=commit_pos, retries=retries,
                   exec_ops=exec_ops)
         return (values, versions, done,
-                n_comm + committing_pos.sum(dtype=jnp.int32), wave + 1, tr)
+                n_comm + committing_t.sum(dtype=jnp.int32), wave + 1, tr)
 
     def cond(state):
         _, _, done, _, wave, _ = state

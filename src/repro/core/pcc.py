@@ -1,39 +1,56 @@
 """Pot Concurrency Control (PCC) — the paper's contribution (§2.2), adapted
 to a dataflow runtime.
 
-Round-based prefix commit
--------------------------
-Each engine round:
+Vectorized round-based prefix commit
+------------------------------------
+Each engine round is three *batched* stages (the shared commit pipeline,
+:mod:`repro.core.protocol`), not a walk over transactions:
 
 1. **Speculative read phase** — every pending transaction executes
    (vmapped) against the committed store image (deferred updates, logged
    footprints: OCC read phase, Fig. 2a/2b).
-2. **Ordered commit** — walking transactions in *sequence order* (the
-   order fixed by the sequencer before execution), commit the maximal
-   in-order prefix of pending transactions whose footprints do not overlap
-   the writes of transactions committing earlier in the same round
-   (paper §2.2.2 "ordered commits" + §2.2.3 "multiple simultaneous fast
-   transactions": a string of successive compatible transactions commits
-   together).
-3. The conflicting suffix re-executes next round against the new store
-   (abort & retry, overlapping its predecessors' commit wait exactly as
-   speculative transactions overlap waiting in the paper).
+2. **Batched conflict analysis** — the paper's per-transaction
+   validation question asked for the whole batch at once
+   (``protocol.earlier_writer_conflicts``): on TPU a masked
+   row-reduction of the K×K footprint-conflict matrix
+   (``kernels/conflict.py``, a tiled bitset-intersection Pallas kernel
+   over bit-packed read/write sets), elsewhere a first-writer-per-
+   address scatter-min with O(K·L) work — two decision-identical
+   formulations of the same question.
+3. **Prefix fixpoint + fused write-back** — the maximal committing
+   in-order prefix (§2.2.2 "ordered commits" + §2.2.3 "multiple
+   simultaneous fast transactions") is a cumulative AND over the
+   matrix's masked row-reduction: ``protocol.prefix_commit`` resolves it
+   in ≤⌈log₂K⌉ device steps via ``associative_scan``, where the old
+   implementation scanned all K positions sequentially, probing an
+   O(n_objects) bitmap per step.  The whole prefix's deferred writes
+   then land in ONE flattened scatter (``protocol.fused_write_back``):
+   the winning writer per address is selected by (commit-position,
+   write-slot) priority, which subsumes both the per-transaction apply
+   chain and per-transaction last-writer dedup.
+
+The conflicting suffix re-executes next round against the new store
+(abort & retry, overlapping its predecessors' commit wait exactly as
+speculative transactions overlap waiting in the paper).
 
 Transaction modes fall out structurally:
 
-- the **head** of the pending prefix is the paper's *fast transaction*: its
-  read phase ran against the fully-committed store and nothing can commit
-  before it, so it needs **no validation** — it always commits (progress
-  guarantee), and on TPU its write-back takes the direct-update Pallas
-  kernel with no version tracking (kernels/commit.py).
+- the **head** of the pending prefix is the paper's *fast transaction*:
+  nothing can commit before it, so row head of the matrix is all-clear
+  by construction — it always commits (progress guarantee), with no
+  validation work accounted;
 - prefix members behind the head are *promoted* transactions
   (compatibility-checked fast commits / live promotion, §2.2.3);
-- the remainder stay *speculative* and retry.
+- the remainder stay *speculative* and retry.  After the prefix
+  commits, the next pending transaction re-executes serially against
+  the fresh store and commits unconditionally (live promotion).
 
 Determinism: the result depends only on (store, transactions, sequence
 order) — never on arrival order, lane count, or timing.  ``pcc_execute``
 takes an ``arrival`` permutation argument solely so tests can prove the
-output is invariant to it.
+output is invariant to it.  The decisions are bit-identical to the
+pre-vectorization scan (``repro.core.legacy_scan``, asserted in
+tests/test_commit_pipeline.py).
 """
 
 from __future__ import annotations
@@ -44,7 +61,7 @@ import jax.numpy as jnp
 from repro.core import protocol
 from repro.core.engine import (MODE_FAST, MODE_PREFIX, MODE_SPEC, MODE_UNSET,
                                EngineDef, ExecTrace, make_trace,
-                               register_engine, seq_rank)
+                               rank_from_order, register_engine)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, TxnResult, run_all, run_txn
 
@@ -74,51 +91,25 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     k = batch.n_txns
     n_obj = store.n_objects
     order = jnp.argsort(seq)  # order[p] = txn index at seq position p
+    rank = rank_from_order(order)
     gv0 = store.gv
+    seq_nos = gv0 + 1 + rank   # version stamp per txn (its seq position)
 
     def round_body(state):
         values, versions, gv, n_comm, rnd, tr = state
         res: TxnResult = run_all(batch, values)
 
-        # --- ordered commit: maximal non-conflicting in-order prefix -----
-        def commit_scan(carry, p):
-            written, alive = carry
-            t = order[p]
-            pending = p >= n_comm
-            conflict = protocol.footprint_conflicts(
-                written, res.raddrs[t], res.rn[t], res.waddrs[t], res.wn[t])
-            committing = alive & pending & ~conflict
-            written = jax.lax.cond(
-                committing,
-                lambda w: protocol.mark_writes(w, res.waddrs[t], res.wn[t]),
-                lambda w: w, written)
-            alive = alive & (committing | ~pending)
-            return (written, alive), committing
+        # --- batched conflict analysis + prefix fixpoint (txn space) -----
+        conflict = protocol.conflict_table(res, n_obj)
+        committing_t = protocol.prefix_commit(
+            res, conflict, order, rank, n_comm, n_obj)
 
-        (_, _), committing_pos = jax.lax.scan(
-            commit_scan,
-            (jnp.zeros((n_obj,), bool), jnp.asarray(True)),
-            jnp.arange(k))
+        # --- fused write-back: the whole prefix in one scatter -----------
+        values, versions = protocol.fused_write_back(
+            values, versions, res.waddrs, res.wvals, res.wn,
+            committing_t, rank, seq_nos)
 
-        # --- write-back in sequence order --------------------------------
-        def apply_scan(carry, p):
-            vals, vers = carry
-            t = order[p]
-            sn = gv0 + p + 1
-
-            def do(args):
-                v, ve = args
-                return protocol.apply_writes(
-                    v, ve, res.waddrs[t], res.wvals[t], res.wn[t], sn)
-
-            vals, vers = jax.lax.cond(
-                committing_pos[p], do, lambda a: a, (vals, vers))
-            return (vals, vers), None
-
-        (values, versions), _ = jax.lax.scan(
-            apply_scan, (values, versions), jnp.arange(k))
-
-        n_new = committing_pos.sum(dtype=jnp.int32)
+        n_new = committing_t.sum(dtype=jnp.int32)
         gv = gv + n_new
 
         # ---- live promotion (paper §2.2.3): the first NON-committing
@@ -145,36 +136,33 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             promoted_pos = jnp.where(do_promote, head_pos, -1)
             n_new = n_new + do_promote.astype(jnp.int32)
 
-        # --- trace bookkeeping (by txn index) ----------------------------
-        pos = jnp.arange(k)
-        pending_pos = pos >= n_comm
-        is_head = pos == n_comm
-        promoted_mask = pos == promoted_pos
-        committing_all = committing_pos | promoted_mask
-        mode_pos = jnp.where(
+        # --- trace bookkeeping: all txn-space, all elementwise -----------
+        pending_t = rank >= n_comm
+        is_head_t = rank == n_comm
+        promoted_t = rank == promoted_pos
+        committing_all = committing_t | promoted_t
+        mode_t = jnp.where(
             committing_all,
-            jnp.where(is_head | promoted_mask, MODE_FAST, MODE_PREFIX),
-            jnp.where(pending_pos, MODE_SPEC, MODE_UNSET))
-        # scatter position-indexed info back to txn order
-        commit_round = tr["commit_round"].at[order].max(
-            jnp.where(committing_all, rnd, -1))
-        first_round = tr["first_round"].at[order].min(
-            jnp.where(pending_pos, rnd, jnp.iinfo(jnp.int32).max))
-        retries = tr["retries"].at[order].add(
-            (pending_pos & ~committing_all).astype(jnp.int32))
-        mode = tr["mode"].at[order].max(mode_pos)
-        wait_rounds = tr["wait_rounds"].at[order].add(
-            (pending_pos & ~committing_all).astype(jnp.int32))
+            jnp.where(is_head_t | promoted_t, MODE_FAST, MODE_PREFIX),
+            jnp.where(pending_t, MODE_SPEC, MODE_UNSET))
+        commit_round = jnp.maximum(tr["commit_round"],
+                                   jnp.where(committing_all, rnd, -1))
+        first_round = jnp.minimum(
+            tr["first_round"],
+            jnp.where(pending_t, rnd, jnp.iinfo(jnp.int32).max))
+        retries = tr["retries"] + (pending_t & ~committing_all)
+        mode = jnp.maximum(tr["mode"], mode_t)
+        wait_rounds = tr["wait_rounds"] + (pending_t & ~committing_all)
         # validation: head (fast) validates nothing; everyone else pending
-        # validates its read set this round (paper Fig. 2b line 9 / 2c line 2)
-        rn_pos = res.rn[order]
+        # validates its read set this round (paper Fig. 2b line 9 / 2c
+        # line 2) — a single masked reduction
         validation_words = tr["validation_words"] + jnp.where(
-            pending_pos & ~is_head, rn_pos, 0).sum(dtype=jnp.int32)
+            pending_t & ~is_head_t, res.rn, 0).sum(dtype=jnp.int32)
         exec_ops = tr["exec_ops"] + jnp.where(
-            pending_pos, batch.n_ins[order], 0).sum(dtype=jnp.int32) \
-            + jnp.where(promoted_mask, batch.n_ins[order],
+            pending_t, batch.n_ins, 0).sum(dtype=jnp.int32) \
+            + jnp.where(promoted_t, batch.n_ins,
                         0).sum(dtype=jnp.int32)  # promotion re-execution
-        promotions = tr["promotions"] + promoted_mask.sum(dtype=jnp.int32)
+        promotions = tr["promotions"] + promoted_t.sum(dtype=jnp.int32)
         tr = dict(tr, commit_round=commit_round, first_round=first_round,
                   retries=retries, mode=mode, wait_rounds=wait_rounds,
                   validation_words=validation_words, exec_ops=exec_ops,
@@ -209,7 +197,7 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         validation_words=tr["validation_words"], exec_ops=tr["exec_ops"],
         promotions=tr["promotions"],
         # PCC commits in sequence order: position = rank in the order
-        commit_pos=seq_rank(seq))
+        commit_pos=rank)
     return TStore(values=values, versions=versions, gv=gv), trace
 
 

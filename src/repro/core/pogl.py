@@ -14,15 +14,13 @@ import jax.numpy as jnp
 
 from repro.core import protocol
 from repro.core.engine import (MODE_FAST, EngineDef, make_trace,
-                               register_engine, seq_rank)
+                               rank_from_order, register_engine)
 from repro.core.tstore import TStore
 from repro.core.txn import TxnBatch, run_txn
 
 
-@jax.jit
-def pogl_execute(store: TStore, batch: TxnBatch, seq: jax.Array) -> TStore:
+def _pogl_ordered(store: TStore, batch: TxnBatch, order: jax.Array) -> TStore:
     k = batch.n_txns
-    order = jnp.argsort(seq)
     gv0 = store.gv
 
     def step(carry, p):
@@ -40,17 +38,24 @@ def pogl_execute(store: TStore, batch: TxnBatch, seq: jax.Array) -> TStore:
     return TStore(values=values, versions=versions, gv=store.gv + k)
 
 
+@jax.jit
+def pogl_execute(store: TStore, batch: TxnBatch, seq: jax.Array) -> TStore:
+    return _pogl_ordered(store, batch, jnp.argsort(seq))
+
+
 def _pogl_raw(store, batch, seq, lanes, n_lanes):
     del lanes, n_lanes
     k = batch.n_txns
-    rank = seq_rank(seq)
+    # argsort once; the rank is its inverse permutation (one scatter)
+    order = jnp.argsort(seq)
+    rank = rank_from_order(order)
     # one txn per serial "round", uninstrumented (global lock = fast path)
     trace = make_trace(
         k, commit_round=rank, commit_pos=rank, first_round=rank,
         mode=jnp.full((k,), MODE_FAST, jnp.int32),
         rounds=jnp.asarray(k, jnp.int32),
         exec_ops=batch.n_ins.sum(dtype=jnp.int32))
-    return pogl_execute(store, batch, seq), trace
+    return _pogl_ordered(store, batch, order), trace
 
 
 register_engine(EngineDef(

@@ -1,10 +1,52 @@
-"""Shared pieces of the concurrency-control engines: conflict detection and
-ordered write-back over transaction footprints (read/write sets)."""
+"""Shared pieces of the concurrency-control engines.
+
+Two layers:
+
+**Scalar helpers** (`footprint_conflicts` / `mark_writes` /
+`apply_writes`) — the per-transaction primitives used by the serial
+paths (PoGL, PCC live promotion, DeSTM token-held retries) and by the
+preserved scan engines in :mod:`repro.core.legacy_scan`.
+
+**Vectorized commit pipeline** (PR 2) — the batched commit machinery
+shared by PCC / OCC / DeSTM.  Instead of walking K transactions through
+a `lax.scan` with an O(n_objects) bitmap probe and a `lax.cond`
+write-back each (K sequential device steps per round), a round is three
+batched stages:
+
+1. :func:`conflict_table` — (on TPU) the K×K footprint-conflict matrix
+   (`kernels.ops.conflict_matrix`: tiled bitset-intersection Pallas
+   kernel over bit-packed address sets, with a dense-mask matmul
+   reference fallback in ops.py);
+2. a commit *decision* — :func:`prefix_commit` (the maximal in-order
+   prefix, an `associative_scan` cumulative-AND: ≤⌈log₂K⌉ device
+   steps) or :func:`wave_commit` (OCC's greedy arrival-order kernel, a
+   fixpoint that converges in the conflict-chain depth, one batched
+   step per iteration).  Both consume
+   :func:`earlier_writer_conflicts`, which answers "does position p's
+   footprint hit the writes of a marked position q < p" either as a
+   masked row-reduction of the conflict matrix (TPU: regular,
+   VPU-friendly, exactly the dense-bitset argument of validate.py) or
+   as a first-writer-per-address scatter-min + gather (O(K·L) work —
+   the right trade on backends where irregular gathers are cheap and
+   K² dense work is not).  The two formulations are decision-identical
+   (asserted in tests);
+3. :func:`fused_write_back` — every committing transaction's deferred
+   writes installed in ONE flattened scatter, the winner per address
+   selected by (commit-position, write-slot) segment-max, subsuming
+   both the per-transaction apply chain and per-transaction
+   last-writer dedup.
+
+All three stages reproduce the scan engines' decisions bit-exactly
+(tests/test_commit_pipeline.py asserts equality against
+`legacy_scan` and a pure-NumPy reference on random batches).
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
 
 
 def footprint_conflicts(written: jax.Array, raddrs, rn, waddrs, wn) -> jax.Array:
@@ -31,7 +73,30 @@ def mark_writes(written: jax.Array, waddrs, wn) -> jax.Array:
 
 def dedup_last_writer(waddrs, wn):
     """Mask selecting, per address, only the LAST write-set entry (a txn may
-    write the same object twice; the later deferred write must win)."""
+    write the same object twice; the later deferred write must win).
+
+    Sort-based O(F log F): order the slots by address (stable, so equal
+    addresses keep slot order) and keep a slot iff it is valid and the
+    next slot in sorted order holds a different address.
+    """
+    length = waddrs.shape[0]
+    idx = jnp.arange(length)
+    valid = idx < wn
+    # invalid slots sort behind every real address (addresses are object
+    # ids, far below int32 max)
+    key = jnp.where(valid, waddrs, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)
+    sorted_key = key[order]
+    nxt = jnp.concatenate([sorted_key[1:],
+                           jnp.full((1,), -1, sorted_key.dtype)])
+    last_of_run = sorted_key != nxt
+    keep = jnp.zeros((length,), bool).at[order].set(last_of_run)
+    return valid & keep
+
+
+def _dedup_last_writer_reference(waddrs, wn):
+    """Pre-PR2 all-pairs O(F²) formulation, kept as the behavioral oracle
+    for :func:`dedup_last_writer` (tests/test_commit_pipeline.py)."""
     length = waddrs.shape[0]
     idx = jnp.arange(length)
     valid = idx < wn
@@ -52,4 +117,159 @@ def apply_writes(values, versions, waddrs, wvals, wn, seq_no):
     tgt = jnp.where(keep, waddrs, n_obj)
     values = values.at[tgt].set(wvals, mode="drop")
     versions = versions.at[tgt].set(seq_no, mode="drop")
+    return values, versions
+
+
+# --------------------------------------------------------------------------
+# Vectorized commit pipeline
+# --------------------------------------------------------------------------
+#
+# Everything below works in TRANSACTION space (storage order), with the
+# serialization order threaded through as ``rank`` — rank[t] = the
+# sequence position of txn t (engines compute it once per batch via
+# engine.rank_from_order).  Staying in txn space keeps the hot per-round
+# path free of (K, L) permutation gathers: the only order-dependent
+# arrays are (K,) rank comparisons.
+
+
+def _matrix_backend() -> bool:
+    # one dispatch predicate shared with the kernel wrappers
+    return kernel_ops._on_tpu()
+
+
+def conflict_table(res, n_objects: int,
+                   use_matrix: bool | None = None) -> jax.Array | None:
+    """The round's K×K footprint-vs-write-set conflict matrix, in txn
+    space: entry (i, j) = footprint(i) ∩ writes(j) ≠ ∅ (the paper's
+    per-txn validation question asked for all ordered pairs at once).
+
+    Materialized only where the dense bitset-intersection kernel is the
+    right formulation (TPU, `kernels/conflict.py`; cf. validate.py's
+    dense-bitset argument).  Returns ``None`` elsewhere —
+    :func:`earlier_writer_conflicts` then uses the first-writer
+    scatter-min formulation, which gives identical verdicts with O(K·L)
+    work (asserted in tests/test_commit_pipeline.py).
+    """
+    if use_matrix is None:
+        use_matrix = _matrix_backend()
+    if not use_matrix:
+        return None
+    return kernel_ops.conflict_matrix(
+        res.raddrs, res.rn, res.waddrs, res.wn, n_objects)
+
+
+def earlier_writer_conflicts(res, conflict, writer_mask: jax.Array,
+                             rank: jax.Array, n_objects: int) -> jax.Array:
+    """bad (K,) bool, txn space: does txn t's footprint (reads ∪ writes)
+    hit the write set of any txn q with ``writer_mask[q]`` that comes
+    earlier in the serialization order (rank[q] < rank[t])?
+
+    This is the one conflict question every engine's commit decision
+    reduces to (PCC: q pending this round; OCC: q currently committing;
+    DeSTM: q a remaining round member).  Two exact formulations:
+
+    * matrix path (``conflict`` present): a masked row-reduction of the
+      precomputed K×K matrix — one batched step, perfectly regular (the
+      TPU-native choice);
+    * scatter path (``conflict`` is None): the *first marked writer per
+      address* via one scatter-min over write slots, then a footprint
+      gather — O(K·L) work with no K² term (the right trade where
+      irregular gathers are cheap).
+      ∃ marked q earlier writing address a  ⟺  first_writer[a] < rank.
+    """
+    if conflict is not None:
+        earlier = writer_mask[None, :] & (rank[None, :] < rank[:, None])
+        return (conflict & earlier).any(axis=1)
+    k, length = res.waddrs.shape
+    slot = jnp.arange(length)
+    wvalid = (slot[None, :] < res.wn[:, None]) & writer_mask[:, None]
+    first_writer = jnp.full((n_objects + 1,), k, jnp.int32).at[
+        jnp.where(wvalid, res.waddrs, n_objects)
+    ].min(jnp.where(wvalid, rank[:, None], k).astype(jnp.int32))
+    rvalid = slot[None, :] < res.rn[:, None]
+    r_hit = jnp.where(rvalid, first_writer[res.raddrs], k) < rank[:, None]
+    svalid = slot[None, :] < res.wn[:, None]
+    w_hit = jnp.where(svalid, first_writer[res.waddrs], k) < rank[:, None]
+    return r_hit.any(axis=1) | w_hit.any(axis=1)
+
+
+def prefix_commit(res, conflict, order: jax.Array, rank: jax.Array,
+                  n_comm: jax.Array, n_objects: int) -> jax.Array:
+    """Maximal committing in-order prefix (PCC's ordered commit, §2.2.2).
+
+    A pending position commits iff no position of this round's pending
+    prefix up to and including it conflicts with an earlier *committing*
+    transaction.  Under the prefix rule "conflicts with an earlier
+    committing txn" equals "conflicts with ANY earlier pending txn":
+    every pending position before the first conflict commits, and
+    nothing after it does.  That collapses the old K-step scan into one
+    batched conflict query plus a cumulative AND — ≤⌈log₂K⌉ device
+    steps via `associative_scan`.
+
+    n_comm: () int32 count of already-committed positions.  Returns
+    committing (K,) bool in TXN space.
+    """
+    k = rank.shape[0]
+    pending = rank >= n_comm
+    bad = earlier_writer_conflicts(res, conflict, pending, rank, n_objects)
+    # positions before the pending window never break the chain
+    ok_pos = jnp.where(jnp.arange(k) >= n_comm, ~bad[order], True)
+    alive_pos = jax.lax.associative_scan(jnp.logical_and, ok_pos)
+    return pending & alive_pos[rank]
+
+
+def wave_commit(res, conflict, pending: jax.Array, rank: jax.Array,
+                n_objects: int) -> jax.Array:
+    """OCC's arrival-order wave rule: c[t] = pending[t] ∧ ¬∃ earlier q:
+    c[q] ∧ conflict[t, q] — the greedy kernel of the conflict DAG (no
+    prefix rule: a conflicting txn aborts but later ones keep
+    committing).
+
+    Solved by fixpoint iteration from the optimistic start c = pending;
+    each step is one batched conflict query, and the iteration provably
+    reaches the unique solution in at most the conflict-chain depth:
+    a txn's verdict is final once all its conflict predecessors'
+    verdicts are, by induction along the order.
+    """
+
+    def body(state):
+        c, _ = state
+        blocked = earlier_writer_conflicts(res, conflict, c, rank, n_objects)
+        c_next = pending & ~blocked
+        return c_next, (c_next == c).all()
+
+    c, _ = jax.lax.while_loop(lambda s: ~s[1], body,
+                              (pending, jnp.asarray(False)))
+    return c
+
+
+def fused_write_back(values, versions, waddrs, wvals, wn, committing,
+                     rank, seq_nos):
+    """Install a whole round of commits in one flattened scatter.
+
+    waddrs (K, L) / wvals (K, L, S) / wn (K,) / committing (K,) /
+    rank (K,) / seq_nos (K,) are all in txn space; ``committing``
+    selects the round's committers and ``seq_nos`` carries each txn's
+    version stamp.  The winning writer per address is the one with the
+    largest (rank, slot) priority — serialization-order-major, so a
+    later committing transaction overwrites an earlier one, and
+    slot-minor, so within one transaction the later deferred write
+    shadows the earlier (subsuming :func:`dedup_last_writer`).
+    Priorities are unique per slot, hence exactly one winner per
+    address and a duplicate-free scatter.
+    """
+    k, length = waddrs.shape
+    n_obj = values.shape[0]
+    slot = jnp.arange(length)
+    valid = committing[:, None] & (slot[None, :] < wn[:, None])
+    prio = (rank.astype(jnp.int32)[:, None] * length
+            + slot[None, :].astype(jnp.int32))
+    addr = jnp.where(valid, waddrs, n_obj).reshape(-1)
+    flat_prio = jnp.where(valid, prio, -1).reshape(-1)
+    best = jnp.full((n_obj + 1,), -1, jnp.int32).at[addr].max(flat_prio)
+    win = valid.reshape(-1) & (flat_prio == best[addr])
+    tgt = jnp.where(win, addr, n_obj)
+    values = values.at[tgt].set(wvals.reshape(k * length, -1), mode="drop")
+    versions = versions.at[tgt].set(
+        jnp.repeat(jnp.asarray(seq_nos, jnp.int32), length), mode="drop")
     return values, versions

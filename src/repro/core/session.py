@@ -89,7 +89,10 @@ class PotSession:
             else RoundRobinSequencer(n_root_lanes=n_lanes)
         self._step = _jitted_step(self.engine.name, donate)
         self.traces: list[ExecTrace] = []
+        # replay log cache, materialized lazily (device->host sync happens
+        # in replay_log(), never on the hot submit path)
         self._log: list[int] = []
+        self._log_batches = 0      # traces already folded into _log
         self._n_txns = 0
 
     # ------------------------------------------------------------- stream
@@ -110,9 +113,9 @@ class PotSession:
         self.store, trace = self._step(
             self.store, batch, jnp.asarray(seq, jnp.int32),
             jnp.asarray(lane_ids, jnp.int32), self.n_lanes)
-        # record the commit order as global txn ids (replay_log schema)
-        order = np.argsort(np.asarray(trace.commit_pos), kind="stable")
-        self._log.extend(int(t) + self._n_txns for t in order)
+        # the trace stays on device: the commit order is recorded by
+        # keeping the trace, and replay_log() materializes it on demand —
+        # no device->host sync on the streaming hot path.
         self._n_txns += k
         self.traces.append(trace)
         return trace
@@ -155,10 +158,19 @@ class PotSession:
 
     def replay_log(self) -> list[int]:
         """Global commit order across the whole stream: entry i is the
-        global txn id (batch offset + index) that committed i-th."""
+        global txn id (batch offset + index) that committed i-th.
+
+        Materialized lazily from the recorded traces (this is where the
+        device->host sync happens); incremental, so repeated calls only
+        pay for batches submitted since the last call."""
+        for trace in self.traces[self._log_batches:]:
+            offset = len(self._log)   # one log entry per committed txn
+            order = np.argsort(np.asarray(trace.commit_pos), kind="stable")
+            self._log.extend(int(t) + offset for t in order)
+            self._log_batches += 1
         return list(self._log)
 
     def replay_sequencer(self) -> ReplaySequencer:
         """A sequencer that replays this session's commit order — feed it
         to a fresh ``PotSession`` with the same batches (paper §2.1)."""
-        return ReplaySequencer(self._log)
+        return ReplaySequencer(self.replay_log())

@@ -1,0 +1,76 @@
+"""K x K footprint-conflict matrix kernel (the batched validation pass
+behind the vectorized commit pipeline, protocol.conflict_table).
+
+The per-transaction validation loop (paper Fig. 2b line 9) probed one
+(n_objects,) bitmap per transaction per commit step — K sequential device
+steps per round.  The pipeline instead asks ONE batched question per
+round: for every ordered pair (i, j), does transaction i's footprint
+(read set + write set) intersect transaction j's write set?  With
+bit-packed address sets (validate.pack_addr_sets) this is a boolean
+"matmul" over W = ceil(n_objects/32) words:
+
+    conflict[i, j] = any_w( foot_bits[i, w] & write_bits[j, w] )
+
+TPU formulation: tile the (K, K) output into (BI, BJ) blocks and the
+word axis into BW-word chunks; each grid step ANDs a (BI, BW) block of
+footprints against a (BJ, BW) block of write sets and OR-accumulates the
+(BI, BJ) any-hit tile across the W grid axis (same accumulate idiom as
+validate.py, lifted from a vector to a matrix of verdicts).  The commit
+decision then becomes a prefix fixpoint over this matrix
+(protocol.prefix_commit / protocol.wave_commit) in O(log K) device steps
+instead of a K-step `lax.scan`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BI = 8     # footprint rows per block (sublane dimension)
+BJ = 128   # write-set rows per block (lane dimension of the output tile)
+BW = 128   # bitset words per block
+
+
+def _conflict_kernel(foot_ref, write_ref, out_ref):
+    """One (BI, BJ) output tile: out[i, j] |= any_w(foot[i, w] & write[j, w])."""
+    foot = foot_ref[...]                                   # (BI, BW)
+    write = write_ref[...]                                 # (BJ, BW)
+    hit = (foot[:, None, :] & write[None, :, :]) != 0      # (BI, BJ, BW)
+    tile = hit.sum(axis=2) > 0                             # (BI, BJ)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = tile.astype(jnp.int32)
+
+    @pl.when(pl.program_id(2) != 0)
+    def _accum():
+        out_ref[...] = out_ref[...] | tile.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conflict_matrix_bits(foot_bits: jax.Array, write_bits: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """conflict (K, K) bool — foot_bits (K, W) int32, write_bits (K, W) int32.
+
+    K must be a multiple of lcm(BI, BJ) and W a multiple of BW (callers
+    pad; see ops.conflict_matrix).  Row i / column j of the result refer
+    to the same transaction ordering as the input rows.
+    """
+    k, w = foot_bits.shape
+    assert k % BI == 0 and k % BJ == 0 and w % BW == 0, (k, w)
+    grid = (k // BI, k // BJ, w // BW)
+    out = pl.pallas_call(
+        _conflict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BI, BW), lambda i, j, v: (i, v)),
+            pl.BlockSpec((BJ, BW), lambda i, j, v: (j, v)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ), lambda i, j, v: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.int32),
+        interpret=interpret,
+    )(foot_bits, write_bits)
+    return out != 0

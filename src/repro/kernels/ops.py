@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import conflict as _conf
 from repro.kernels import fused_adamw as _adamw
 from repro.kernels import kv_commit as _kvc
 from repro.kernels import validate as _val
@@ -47,6 +48,48 @@ def validate(read_addrs: jax.Array, read_n: jax.Array,
     out = _val.validate_bitsets(read_bits, written_bits,
                                 interpret=not _on_tpu())
     return out[:k]
+
+
+def _conflict_matrix_dense(raddrs, rn, waddrs, wn, n_objects):
+    """Reference fallback for :func:`conflict_matrix` off-TPU: dense 0/1
+    footprint masks + one matmul (BLAS-batched on CPU, exact — counts are
+    small integers in float32)."""
+    k, length = raddrs.shape
+
+    def dense(addrs, n):
+        valid = jnp.arange(length)[None, :] < n[:, None]
+        tgt = jnp.where(valid, addrs, n_objects)  # invalid -> shadow column
+        mask = jnp.zeros((k, n_objects + 1), jnp.float32)
+        mask = mask.at[jnp.arange(k)[:, None], tgt].set(1.0)
+        return mask[:, :n_objects]
+
+    wmask = dense(waddrs, wn)
+    fmask = jnp.maximum(dense(raddrs, rn), wmask)
+    return (fmask @ wmask.T) > 0.5
+
+
+def conflict_matrix(raddrs: jax.Array, rn: jax.Array, waddrs: jax.Array,
+                    wn: jax.Array, n_objects: int) -> jax.Array:
+    """Batched pairwise conflict analysis: (K, K) bool where entry (i, j)
+    means footprint(i) = reads(i) ∪ writes(i) intersects writes(j).
+
+    raddrs/waddrs (K, L) masked by rn/wn (K,).  On TPU this is the tiled
+    bitset-intersection Pallas kernel (conflict.py) over bit-packed
+    address sets; off-TPU it falls back to the dense-mask reference
+    formulation (same verdicts, asserted in tests/test_kernels.py).
+    """
+    if not _on_tpu():
+        return _conflict_matrix_dense(raddrs, rn, waddrs, wn, n_objects)
+    k = raddrs.shape[0]
+    read_bits = _val.pack_addr_sets(raddrs, rn, n_objects)
+    write_bits = _val.pack_addr_sets(waddrs, wn, n_objects)
+    foot_bits = read_bits | write_bits
+    # pad rows to the larger of the two row-block sizes, words to BW
+    rows = max(_conf.BI, _conf.BJ)
+    foot_bits = _pad_to(_pad_to(foot_bits, rows, 0), _conf.BW, 1)
+    write_bits = _pad_to(_pad_to(write_bits, rows, 0), _conf.BW, 1)
+    out = _conf.conflict_matrix_bits(foot_bits, write_bits, interpret=False)
+    return out[:k, :k]
 
 
 def adamw_update(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999,

@@ -13,6 +13,13 @@ def validate_bitsets_ref(read_bits: jax.Array,
     return hit.any(axis=1)
 
 
+def conflict_matrix_bits_ref(foot_bits: jax.Array,
+                             write_bits: jax.Array) -> jax.Array:
+    """conflict (K, K) bool: any(foot_bits[i] & write_bits[j])."""
+    hit = (foot_bits[:, None, :] & write_bits[None, :, :]) != 0
+    return hit.any(axis=2)
+
+
 def adamw_ref(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
               wd=0.01):
     g = g.astype(jnp.float32)

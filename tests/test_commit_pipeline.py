@@ -1,0 +1,371 @@
+"""Equivalence tests for the vectorized commit pipeline (PR 2).
+
+The pipeline (protocol.conflict_table -> prefix_commit / wave_commit ->
+fused_write_back) must reproduce the pre-refactor scan machinery
+bit-exactly:
+
+  * matrix-fixpoint prefix decisions == a pure-NumPy reference scan
+    (hypothesis property + fixed regression vectors at K in {1, 2, 64});
+  * every engine's final TStore image and ExecTrace
+    commit_pos/mode/retries == the preserved scan engines
+    (repro.core.legacy_scan);
+  * the sort-based dedup_last_writer == the old all-pairs mask.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (READ, RMW, WRITE, ReplaySequencer,
+                        RoundRobinSequencer, destm_execute, fingerprint,
+                        make_batch, make_store, occ_execute, pcc_execute,
+                        run_all)
+from repro.core import legacy_scan, protocol
+from repro.core import workloads as W
+from repro.core.engine import rank_from_order, seq_rank
+
+
+# ----------------------------------------------------------- NumPy oracles
+def _footprints(batch, values):
+    """Host-side copies of one speculative round's footprints."""
+    res = run_all(batch, values)
+    return (np.asarray(res.raddrs), np.asarray(res.rn),
+            np.asarray(res.waddrs), np.asarray(res.wn), res)
+
+
+def numpy_prefix_reference(raddrs, rn, waddrs, wn, order, n_comm):
+    """Pure-NumPy transliteration of the legacy PCC commit scan: walk the
+    sequence order, commit the maximal prefix of pending txns whose
+    footprints miss the writes of earlier committers."""
+    k = len(order)
+    written = set()
+    alive = True
+    committing = np.zeros(k, bool)
+    for p in range(k):
+        t = order[p]
+        pending = p >= n_comm
+        foot = set(raddrs[t][:rn[t]].tolist()) | set(waddrs[t][:wn[t]].tolist())
+        conflict = bool(foot & written)
+        c = alive and pending and not conflict
+        if c:
+            written |= set(waddrs[t][:wn[t]].tolist())
+        committing[p] = c
+        alive = alive and (c or not pending)
+    return committing
+
+
+def numpy_wave_reference(raddrs, rn, waddrs, wn, arrival, pending):
+    """Pure-NumPy transliteration of the legacy OCC wave scan (greedy,
+    no prefix cutoff)."""
+    k = len(arrival)
+    written = set()
+    committing = np.zeros(k, bool)
+    for p in range(k):
+        t = arrival[p]
+        foot = set(raddrs[t][:rn[t]].tolist()) | set(waddrs[t][:wn[t]].tolist())
+        c = bool(pending[p]) and not (foot & written)
+        if c:
+            written |= set(waddrs[t][:wn[t]].tolist())
+        committing[p] = c
+    return committing
+
+
+def _prefix_pos(res, order, n_comm, n_objects, use_matrix=False):
+    """Run the pipeline's prefix decision; return it in POSITION space
+    (to compare against the position-space NumPy reference)."""
+    order = jnp.asarray(np.asarray(order), jnp.int32)
+    rank = rank_from_order(order)
+    conflict = protocol.conflict_table(res, n_objects, use_matrix=use_matrix)
+    committing_t = protocol.prefix_commit(
+        res, conflict, order, rank, jnp.asarray(n_comm, jnp.int32), n_objects)
+    return np.asarray(committing_t)[np.asarray(order)]
+
+
+def _wave_pos(res, arrival, pending_pos, n_objects, use_matrix=False):
+    """Run the pipeline's wave decision; return it in POSITION space."""
+    arrival_np = np.asarray(arrival)
+    arrival = jnp.asarray(arrival_np, jnp.int32)
+    rank = rank_from_order(arrival)
+    pending_t = np.zeros(len(arrival_np), bool)
+    pending_t[arrival_np] = pending_pos
+    conflict = protocol.conflict_table(res, n_objects, use_matrix=use_matrix)
+    committing_t = protocol.wave_commit(
+        res, conflict, jnp.asarray(pending_t), rank, n_objects)
+    return np.asarray(committing_t)[arrival_np]
+
+
+# ----------------------------------------------- fixed vectors, K in {1,2,64}
+def test_prefix_regression_k1():
+    batch = make_batch([[(RMW, 0, False, 1)]])
+    store = make_store(4)
+    res = run_all(batch, store.values)
+    np.testing.assert_array_equal(
+        _prefix_pos(res, [0], 0, 4), [True])  # head always commits
+
+
+def test_prefix_regression_k2_conflict_pair():
+    batch = make_batch([[(RMW, 3, False, 1)], [(RMW, 3, False, 1)]])
+    store = make_store(4)
+    res = run_all(batch, store.values)
+    for order in ([0, 1], [1, 0]):
+        np.testing.assert_array_equal(
+            _prefix_pos(res, order, 0, 4), [True, False])
+    # disjoint pair: both commit
+    batch2 = make_batch([[(RMW, 0, False, 1)], [(RMW, 1, False, 1)]])
+    res2 = run_all(batch2, store.values)
+    np.testing.assert_array_equal(
+        _prefix_pos(res2, [0, 1], 0, 4), [True, True])
+
+
+@pytest.mark.parametrize("n_comm", [0, 7, 63])
+def test_prefix_regression_k64(n_comm):
+    wl = W.counters(n_txns=64, n_objects=48, n_reads=2, n_writes=2,
+                    n_lanes=8, skew=0.8, seed=13)
+    store = make_store(wl.n_objects, init=np.arange(wl.n_objects) % 7)
+    rng = np.random.default_rng(n_comm)
+    order = rng.permutation(64)
+    raddrs, rn, waddrs, wn, res = _footprints(wl.batch, store.values)
+    exp = numpy_prefix_reference(raddrs, rn, waddrs, wn, order, n_comm)
+    # both conflict formulations must match the reference scan exactly
+    for use_matrix in (False, True):
+        np.testing.assert_array_equal(
+            _prefix_pos(res, order, n_comm, wl.n_objects,
+                        use_matrix=use_matrix), exp,
+            err_msg=f"use_matrix={use_matrix}")
+
+
+@pytest.mark.parametrize("k", [1, 2, 64])
+def test_wave_regression(k):
+    wl = W.counters(n_txns=k, n_objects=max(4, k // 4), n_reads=1,
+                    n_writes=2, n_lanes=4, skew=0.5, seed=21)
+    store = make_store(wl.n_objects)
+    rng = np.random.default_rng(k)
+    arrival = rng.permutation(k)
+    pending = rng.random(k) < 0.8
+    raddrs, rn, waddrs, wn, res = _footprints(wl.batch, store.values)
+    exp = numpy_wave_reference(raddrs, rn, waddrs, wn, arrival, pending)
+    for use_matrix in (False, True):
+        got = _wave_pos(res, arrival, pending, wl.n_objects,
+                        use_matrix=use_matrix)
+        np.testing.assert_array_equal(got, exp,
+                                      err_msg=f"use_matrix={use_matrix}")
+
+
+# ------------------------------------------------------ hypothesis property
+@st.composite
+def decision_cases(draw):
+    n_objects = draw(st.sampled_from([4, 8, 16]))
+    k = draw(st.integers(1, 12))
+    progs = []
+    for _ in range(k):
+        n_ins = draw(st.integers(1, 5))
+        ins = []
+        for _ in range(n_ins):
+            op = draw(st.sampled_from([READ, WRITE, RMW]))
+            addr = draw(st.integers(0, n_objects - 1))
+            ind = draw(st.booleans())
+            val = draw(st.integers(-3, 3))
+            ins.append((op, addr, ind, val))
+        progs.append(ins)
+    order = draw(st.permutations(list(range(k))))
+    n_comm = draw(st.integers(0, k))
+    return n_objects, progs, order, n_comm
+
+
+@settings(max_examples=40, deadline=None)
+@given(decision_cases())
+def test_property_matrix_prefix_equals_numpy_scan(case):
+    """The matrix-fixpoint prefix equals the pure-NumPy reference scan on
+    random batches/orders/pending windows (incl. indirect addressing)."""
+    n_objects, progs, order, n_comm = case
+    batch = make_batch(progs)
+    store = make_store(n_objects, init=np.arange(n_objects) % 5)
+    raddrs, rn, waddrs, wn, res = _footprints(batch, store.values)
+    order = np.asarray(order)
+    exp = numpy_prefix_reference(raddrs, rn, waddrs, wn, order, n_comm)
+    pending = np.arange(len(order)) >= n_comm
+    exp_w = numpy_wave_reference(raddrs, rn, waddrs, wn, order, pending)
+    for use_matrix in (False, True):
+        np.testing.assert_array_equal(
+            _prefix_pos(res, order, n_comm, n_objects,
+                        use_matrix=use_matrix), exp)
+        got_w = _wave_pos(res, order, pending, n_objects,
+                          use_matrix=use_matrix)
+        np.testing.assert_array_equal(got_w, exp_w)
+
+
+# ------------------------------------------- engine vs legacy-scan equality
+ENGINE_WORKLOADS = [
+    W.counters(n_txns=1, n_objects=8, n_reads=1, n_writes=1, n_lanes=1,
+               skew=0.0, seed=0),
+    W.counters(n_txns=2, n_objects=2, n_reads=1, n_writes=2, n_lanes=2,
+               skew=0.0, seed=1),
+    W.counters(n_txns=64, n_objects=32, n_reads=2, n_writes=2, n_lanes=8,
+               skew=1.0, seed=2),
+    W.vacation_like(n_txns=24, n_objects=128, n_lanes=4, seed=3),
+    W.labyrinth_like(n_txns=8, n_objects=64, path_len=8, n_lanes=4, seed=6),
+    W.ssca2_like(n_txns=24, n_objects=512, n_lanes=8, seed=5),
+]
+
+
+def _seq_for(wl):
+    seqr = RoundRobinSequencer(n_root_lanes=wl.n_lanes)
+    return jnp.asarray(seqr.order_for(wl.lanes.tolist()), jnp.int32)
+
+
+def _assert_trace_equal(t_old, t_new, fields, ctx):
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(t_old, f)), np.asarray(getattr(t_new, f)),
+            err_msg=f"{ctx}: trace field {f!r} diverged from legacy scan")
+
+
+@pytest.mark.parametrize("wl", ENGINE_WORKLOADS, ids=lambda w: f"{w.name}-k{w.batch.n_txns}")
+def test_pcc_pipeline_equals_legacy_scan(wl):
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    for lp in (True, False):
+        out_old, t_old = legacy_scan.pcc_execute_scan(
+            store, wl.batch, seq, live_promotion=lp)
+        out_new, t_new = pcc_execute(store, wl.batch, seq, live_promotion=lp)
+        assert int(fingerprint(out_old)) == int(fingerprint(out_new))
+        np.testing.assert_array_equal(np.asarray(out_old.versions),
+                                      np.asarray(out_new.versions))
+        _assert_trace_equal(
+            t_old, t_new,
+            ["commit_pos", "mode", "retries", "commit_round", "first_round",
+             "wait_rounds", "rounds", "exec_ops", "validation_words",
+             "promotions"], f"pcc lp={lp}")
+
+
+@pytest.mark.parametrize("wl", ENGINE_WORKLOADS, ids=lambda w: f"{w.name}-k{w.batch.n_txns}")
+def test_occ_pipeline_equals_legacy_scan(wl):
+    store = make_store(wl.n_objects)
+    k = wl.batch.n_txns
+    for s in range(2):
+        arrival = jnp.asarray(np.random.default_rng(s).permutation(k),
+                              jnp.int32)
+        out_old, t_old = legacy_scan.occ_execute_scan(store, wl.batch, arrival)
+        out_new, t_new = occ_execute(store, wl.batch, arrival)
+        assert int(fingerprint(out_old)) == int(fingerprint(out_new))
+        np.testing.assert_array_equal(np.asarray(out_old.versions),
+                                      np.asarray(out_new.versions))
+        _assert_trace_equal(
+            t_old, t_new,
+            ["commit_pos", "retries", "commit_round", "rounds", "exec_ops"],
+            f"occ arrival#{s}")
+
+
+@pytest.mark.parametrize("wl", ENGINE_WORKLOADS, ids=lambda w: f"{w.name}-k{w.batch.n_txns}")
+def test_destm_pipeline_equals_legacy_scan(wl):
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    lanes = jnp.asarray(wl.lanes, jnp.int32)
+    out_old, t_old = legacy_scan.destm_execute_scan(
+        store, wl.batch, seq, lanes, wl.n_lanes)
+    out_new, t_new = destm_execute(store, wl.batch, seq, lanes, wl.n_lanes)
+    assert int(fingerprint(out_old)) == int(fingerprint(out_new))
+    np.testing.assert_array_equal(np.asarray(out_old.versions),
+                                  np.asarray(out_new.versions))
+    _assert_trace_equal(
+        t_old, t_new,
+        ["commit_pos", "retries", "commit_round", "first_round", "rounds",
+         "exec_ops", "barrier_ops"], "destm")
+
+
+# ------------------------------------------------- fused write-back oracle
+def test_fused_write_back_matches_sequential_apply():
+    """The one-scatter write-back equals a txn-by-txn apply chain,
+    including cross-txn overwrites and within-txn duplicate writes."""
+    rng = np.random.default_rng(7)
+    k, length, slot, n_obj = 9, 5, 2, 12
+    waddrs = jnp.asarray(rng.integers(0, n_obj, (k, length)), jnp.int32)
+    wvals = jnp.asarray(rng.integers(-9, 9, (k, length, slot)), jnp.int32)
+    wn = jnp.asarray(rng.integers(0, length + 1, (k,)), jnp.int32)
+    committing = jnp.asarray(rng.random(k) < 0.7)
+    seq_nos = jnp.arange(100, 100 + k, dtype=jnp.int32)
+    values0 = jnp.asarray(rng.integers(0, 5, (n_obj, slot)), jnp.int32)
+    versions0 = jnp.zeros((n_obj,), jnp.int32)
+    got_v, got_ver = protocol.fused_write_back(
+        values0, versions0, waddrs, wvals, wn, committing,
+        jnp.arange(k, dtype=jnp.int32), seq_nos)
+    exp_v, exp_ver = values0, versions0
+    for p in range(k):
+        if bool(committing[p]):
+            exp_v, exp_ver = protocol.apply_writes(
+                exp_v, exp_ver, waddrs[p], wvals[p], wn[p], seq_nos[p])
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(exp_v))
+    np.testing.assert_array_equal(np.asarray(got_ver), np.asarray(exp_ver))
+
+
+def test_fused_write_back_permuted_rank():
+    """With a non-identity rank the winner per address follows the
+    serialization order, not the storage order."""
+    rng = np.random.default_rng(3)
+    k, length, slot, n_obj = 7, 4, 1, 6
+    waddrs = jnp.asarray(rng.integers(0, n_obj, (k, length)), jnp.int32)
+    wvals = jnp.asarray(rng.integers(-9, 9, (k, length, slot)), jnp.int32)
+    wn = jnp.asarray(rng.integers(0, length + 1, (k,)), jnp.int32)
+    committing = jnp.asarray(rng.random(k) < 0.8)
+    rank_np = rng.permutation(k)
+    rank = jnp.asarray(rank_np, jnp.int32)
+    seq_nos = jnp.asarray(50 + rank_np, jnp.int32)
+    values0 = jnp.zeros((n_obj, slot), jnp.int32)
+    versions0 = jnp.zeros((n_obj,), jnp.int32)
+    got_v, got_ver = protocol.fused_write_back(
+        values0, versions0, waddrs, wvals, wn, committing, rank, seq_nos)
+    exp_v, exp_ver = values0, versions0
+    for t in np.argsort(rank_np):      # apply serially in rank order
+        if bool(committing[t]):
+            exp_v, exp_ver = protocol.apply_writes(
+                exp_v, exp_ver, waddrs[t], wvals[t], wn[t], seq_nos[t])
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(exp_v))
+    np.testing.assert_array_equal(np.asarray(got_ver), np.asarray(exp_ver))
+
+
+# ----------------------------------------------------- dedup + rank helpers
+@pytest.mark.parametrize("seed", range(6))
+def test_dedup_last_writer_matches_all_pairs_reference(seed):
+    rng = np.random.default_rng(seed)
+    length = int(rng.integers(1, 12))
+    waddrs = jnp.asarray(rng.integers(0, 4, (length,)), jnp.int32)
+    for wn in [0, length // 2, length]:
+        got = np.asarray(protocol.dedup_last_writer(
+            waddrs, jnp.asarray(wn, jnp.int32)))
+        exp = np.asarray(protocol._dedup_last_writer_reference(
+            waddrs, jnp.asarray(wn, jnp.int32)))
+        np.testing.assert_array_equal(got, exp)
+
+
+def test_seq_rank_is_inverse_permutation():
+    rng = np.random.default_rng(0)
+    for k in [1, 2, 17, 64]:
+        seq = jnp.asarray(rng.permutation(k) + 1, jnp.int32)
+        order = jnp.argsort(seq)
+        rank = np.asarray(rank_from_order(order))
+        np.testing.assert_array_equal(rank,
+                                      np.argsort(np.argsort(np.asarray(seq))))
+        np.testing.assert_array_equal(np.asarray(seq_rank(seq)), rank)
+
+
+# ------------------------------------------------------ lazy replay log
+def test_replay_log_is_lazy_and_incremental():
+    from repro.core import PotSession
+    wl = W.counters(n_txns=8, n_objects=32, n_reads=1, n_writes=1,
+                    n_lanes=2, seed=4)
+    session = PotSession(wl.n_objects, engine="pcc", n_lanes=2)
+    session.submit(wl.batch, wl.lanes.tolist())
+    first = session.replay_log()
+    assert len(first) == 8
+    session.submit(wl.batch, wl.lanes.tolist())
+    second = session.replay_log()
+    assert second[:8] == first and len(second) == 16
+    assert session.replay_log() == second  # idempotent
+    # and the replayed session reproduces the stream bitwise
+    replay = PotSession(wl.n_objects, engine="pcc",
+                        sequencer=session.replay_sequencer())
+    replay.run_stream([wl.batch, wl.batch])
+    assert replay.fingerprint() == session.fingerprint()

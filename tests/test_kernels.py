@@ -9,6 +9,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
+from repro.kernels.conflict import conflict_matrix_bits
+from repro.kernels import conflict as conflict_mod
 from repro.kernels.validate import BK, BW, pack_addr_sets, validate_bitsets
 
 
@@ -67,6 +69,79 @@ def test_validate_property(k, l, n_objects):
         bool(set(ra[i, :rn[i]].tolist()) & set(wa[:wn].tolist()))
         for i in range(k)])
     np.testing.assert_array_equal(out, exp)
+
+
+# --------------------------------------------------------- conflict matrix
+def test_conflict_matrix_kernel_vs_bits_ref():
+    rng = np.random.default_rng(5)
+    k = max(conflict_mod.BI, conflict_mod.BJ)
+    w = conflict_mod.BW
+    foot = jnp.asarray(rng.integers(0, 2**31, (k, w)), jnp.int32)
+    write = jnp.asarray((rng.random((k, w)) < 0.05) *
+                        rng.integers(0, 2**31, (k, w)), jnp.int32)
+    foot = foot | write  # footprints include the write set
+    out = conflict_matrix_bits(foot, write, interpret=True)
+    exp = ref.conflict_matrix_bits_ref(foot, write)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_conflict_matrix_kernel_multiblock_accumulate():
+    """Conflicts living in different word blocks must OR across the W grid
+    axis (2 * BW words => two accumulation steps per tile)."""
+    k = max(conflict_mod.BI, conflict_mod.BJ)
+    w = 2 * conflict_mod.BW
+    foot = np.zeros((k, w), np.int32)
+    write = np.zeros((k, w), np.int32)
+    foot[3, conflict_mod.BW + 7] = 1 << 11      # hit only in the 2nd block
+    write[5, conflict_mod.BW + 7] = 1 << 11
+    out = np.asarray(conflict_matrix_bits(
+        jnp.asarray(foot), jnp.asarray(write), interpret=True))
+    exp = np.zeros((k, k), bool)
+    exp[3, 5] = True
+    np.testing.assert_array_equal(out, exp)
+
+
+@pytest.mark.parametrize("k,l,n_objects", [
+    (1, 1, 32), (7, 4, 64), (20, 6, 300), (33, 3, 4096),
+])
+def test_conflict_matrix_op_vs_sets(k, l, n_objects):
+    """ops.conflict_matrix (whichever backend path) == set intersection."""
+    rng = np.random.default_rng(k * 13 + l)
+    ra = np.asarray(rng.integers(0, n_objects, (k, l)), np.int32)
+    rn = np.asarray(rng.integers(0, l + 1, (k,)), np.int32)
+    wa = np.asarray(rng.integers(0, n_objects, (k, l)), np.int32)
+    wn = np.asarray(rng.integers(0, l + 1, (k,)), np.int32)
+    out = np.asarray(ops.conflict_matrix(
+        jnp.asarray(ra), jnp.asarray(rn), jnp.asarray(wa), jnp.asarray(wn),
+        n_objects))
+    foot = [set(ra[i, :rn[i]].tolist()) | set(wa[i, :wn[i]].tolist())
+            for i in range(k)]
+    writes = [set(wa[j, :wn[j]].tolist()) for j in range(k)]
+    exp = np.array([[bool(foot[i] & writes[j]) for j in range(k)]
+                    for i in range(k)])
+    np.testing.assert_array_equal(out, exp)
+
+
+def test_conflict_matrix_paths_agree():
+    """The dense-mask fallback and the bit-packed kernel formulation give
+    identical verdicts."""
+    rng = np.random.default_rng(11)
+    k, l, n_objects = 17, 5, 130
+    ra = jnp.asarray(rng.integers(0, n_objects, (k, l)), jnp.int32)
+    rn = jnp.asarray(rng.integers(0, l + 1, (k,)), jnp.int32)
+    wa = jnp.asarray(rng.integers(0, n_objects, (k, l)), jnp.int32)
+    wn = jnp.asarray(rng.integers(0, l + 1, (k,)), jnp.int32)
+    dense = np.asarray(ops._conflict_matrix_dense(ra, rn, wa, wn, n_objects))
+    read_bits = pack_addr_sets(ra, rn, n_objects)
+    write_bits = pack_addr_sets(wa, wn, n_objects)
+    foot_bits = read_bits | write_bits
+    rows = max(conflict_mod.BI, conflict_mod.BJ)
+    pad_r = (-k) % rows
+    pad_w = (-foot_bits.shape[1]) % conflict_mod.BW
+    pad = lambda x: jnp.pad(x, ((0, pad_r), (0, pad_w)))
+    packed = np.asarray(conflict_matrix_bits(
+        pad(foot_bits), pad(write_bits), interpret=True))[:k, :k]
+    np.testing.assert_array_equal(dense, packed)
 
 
 # ------------------------------------------------------------- fused adamw
