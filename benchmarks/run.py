@@ -17,12 +17,12 @@ def main() -> None:
                     help="substring filter on benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (fig6_fast_tx, fig7_stamp, fig8_stmbench7,
-                            fig9_wait, fig11_scalability, fig13_capacity,
-                            fig14_det_training, roofline)
+    from benchmarks import (engine_bench, fig6_fast_tx, fig7_stamp,
+                            fig8_stmbench7, fig9_wait, fig11_scalability,
+                            fig13_capacity, fig14_det_training, roofline)
     mods = [fig6_fast_tx, fig7_stamp, fig8_stmbench7, fig9_wait,
             fig11_scalability, fig13_capacity, fig14_det_training,
-            roofline]
+            roofline, engine_bench]
     print("name,us_per_call,derived")
     failed = []
     for mod in mods:

@@ -1,28 +1,57 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
-# the test suite: it executes every engine through BOTH the preserved
-# legacy commit scans and the vectorized commit pipeline and asserts the
-# store fingerprints / commit positions agree bitwise, so perf refactors
-# of the commit machinery cannot silently diverge.
-set -euo pipefail
+# the test suite: it executes every engine through the preserved legacy
+# commit scans, the PR2 rebuild pipeline AND the PR3 incremental
+# RoundState loop, asserting the store fingerprints / commit positions
+# agree bitwise, so perf refactors of the commit machinery cannot
+# silently diverge.
+#
+# --incremental-smoke runs benchmarks/engine_bench.py --incremental-smoke:
+# incremental == rebuild store fingerprints and traces across all three
+# engines (the RoundState equivalence gate).
+#
+# Stages do NOT short-circuit each other: every requested stage runs and
+# the script exits non-zero if ANY stage failed (the last failing stage's
+# exit code is propagated).
+set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
+INCREMENTAL_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
-  if [[ "$arg" == "--bench-smoke" ]]; then
-    BENCH_SMOKE=1
-  else
-    PYTEST_ARGS+=("$arg")
-  fi
+  case "$arg" in
+    --bench-smoke) BENCH_SMOKE=1 ;;
+    --incremental-smoke) INCREMENTAL_SMOKE=1 ;;
+    *) PYTEST_ARGS+=("$arg") ;;
+  esac
 done
 
-python -m pytest -x -q "${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}"
+FAIL=0
+run_stage() {
+  local name="$1"
+  shift
+  echo "== ci stage: $name"
+  "$@"
+  local rc=$?
+  if [[ $rc -ne 0 ]]; then
+    echo "== ci stage FAILED: $name (exit $rc)" >&2
+    FAIL=$rc
+  fi
+}
+
+run_stage tier-1 python -m pytest -x -q "${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}"
 
 if [[ "$BENCH_SMOKE" == "1" ]]; then
-  python benchmarks/engine_bench.py --smoke
+  run_stage bench-smoke python benchmarks/engine_bench.py --smoke
 fi
+
+if [[ "$INCREMENTAL_SMOKE" == "1" ]]; then
+  run_stage incremental-smoke python benchmarks/engine_bench.py --incremental-smoke
+fi
+
+exit "$FAIL"

@@ -52,7 +52,7 @@ from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
 from repro.core.session import PotSession
 from repro.core.tstore import TStore, fingerprint, make_store
 from repro.core.txn import (NOP, READ, RMW, WRITE, TxnBatch, TxnResult,
-                            make_batch, run_all, run_txn)
+                            make_batch, run_all, run_live, run_txn)
 
 __all__ = [
     # unified engine API
@@ -61,7 +61,7 @@ __all__ = [
     "MODE_UNSET", "MODE_FAST", "MODE_PREFIX", "MODE_SPEC",
     # store + transactions
     "TStore", "make_store", "fingerprint",
-    "TxnBatch", "TxnResult", "make_batch", "run_all", "run_txn",
+    "TxnBatch", "TxnResult", "make_batch", "run_all", "run_live", "run_txn",
     "NOP", "READ", "WRITE", "RMW",
     # sequencers
     "RoundRobinSequencer", "ReplaySequencer", "ExplicitSequencer",

@@ -20,7 +20,12 @@ the clean block before it), the whole clean block lands in one fused
 scatter, and only the conflicting transaction re-executes serially
 while holding the token.  A round costs O(#retries) device steps on
 O(n_lanes·L)-sized operands instead of a K-step scan over O(n_objects)
-probes; a conflict-free round is entirely batched.  Decisions are
+probes; a conflict-free round is entirely batched.  Since PR 3 the round's
+read phase is the *masked* executor (``txn.run_live`` threaded through
+``protocol.RoundState``): only the ≤ n_lanes members execute (every other
+transaction's cached row is carried and never consumed until its own
+round), and each retry event re-executes its lane through the same masked
+path instead of a scalar ``run_txn`` chain.  Decisions are
 bit-identical to the old scan (``repro.core.legacy_scan``): a clean
 commit's actual write set IS its speculative one, so the batched
 verdicts match the serial walk's exactly up to each retry, and the
@@ -38,8 +43,6 @@ differs, which is exactly the paper's Fig. 7/9/10 story.
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
@@ -47,7 +50,7 @@ from repro.core import protocol
 from repro.core.engine import (EngineDef, ExecTrace, make_trace,
                                rank_from_order, register_engine, seq_rank)
 from repro.core.tstore import TStore
-from repro.core.txn import TxnBatch, run_all, run_txn
+from repro.core.txn import TxnBatch, TxnResult, run_live
 
 # The old per-engine trace dataclass is now the canonical schema.
 # (barrier_ops — Σ_rounds Σ_lanes (max_cost - cost), the instruction-slots
@@ -55,24 +58,23 @@ from repro.core.txn import TxnBatch, run_all, run_txn
 DestmTrace = ExecTrace
 
 
-class _CompactRes(NamedTuple):
-    """The footprint slice protocol.earlier_writer_conflicts needs, for
-    the round's compacted (n_lanes, L) member block."""
-
-    raddrs: jax.Array
-    rn: jax.Array
-    waddrs: jax.Array
-    wn: jax.Array
-
-
 def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                    lanes: jax.Array, n_lanes: int,
-                   max_rounds: int | None = None) -> tuple[TStore, ExecTrace]:
+                   max_rounds: int | None = None,
+                   incremental: bool = True) -> tuple[TStore, ExecTrace]:
     """seq: (K,) 1-based sequence numbers; lanes: (K,) lane of each txn.
 
     Token order within a round = sequence order restricted to the round's
     transactions (with the paper's shared round-robin sequencer this is the
     lane order, matching DeSTM's token passing).
+
+    ``incremental``: execute only the round's ≤ n_lanes members through
+    the masked executor (``run_live`` via ``protocol.RoundState``) —
+    every other transaction's row is carried, and a row is only ever
+    consumed in the round its transaction is a member of, so the loop is
+    bit-identical to the full per-round ``run_all`` (False, the PR 2
+    behavior).  DeSTM carries no conflict table: its conflict questions
+    live on the compacted (n_lanes, L) block.
     """
     k = batch.n_txns
     n_obj = store.n_objects
@@ -82,7 +84,7 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     lane_slot = jnp.arange(n_lanes)
 
     def round_body(state):
-        values, versions, done, rnd, tr = state
+        rs, done, rnd, tr = state
 
         # ---- round membership: first pending txn (in seq order) per lane,
         # one scatter-min instead of a K-step pick scan
@@ -98,17 +100,24 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         live = sel_pos < k
         sel_txn = order[jnp.clip(sel_pos, 0, k - 1)]  # txn id per member
 
-        # ---- speculative execution; footprints of the members only
-        res = run_all(batch, values)
+        # ---- masked speculative execution: only the round's members run
+        live_t = sel_t if incremental else jnp.ones((k,), bool)
+        rs = protocol.refresh_round_state(rs, batch, live_t)
+        res = rs.res
+        values, versions = rs.values, rs.versions
         ra_c, rn_c = res.raddrs[sel_txn], res.rn[sel_txn]
         wa_c, wv_c, wn_c = (res.waddrs[sel_txn], res.wvals[sel_txn],
                             res.wn[sel_txn])
         sn_c = gv0 + 1 + sel_pos                      # version stamps
+        compact_batch = jax.tree.map(lambda a: a[sel_txn], batch)
+        compact_res = TxnResult(raddrs=ra_c, rn=rn_c, waddrs=wa_c,
+                                wvals=wv_c, wn=wn_c)
 
         # ---- token-order commits, one iteration per RETRY EVENT: commit
-        # the conflict-free block in one fused scatter, serially re-execute
-        # the first conflicting txn (token held), repeat on the rest.
-        # All operands are compact (n_lanes, L) — no O(K) work per event.
+        # the conflict-free block in one fused scatter, batch-re-execute
+        # the conflicting lane through the masked executor (token held),
+        # repeat on the rest.  All operands are compact (n_lanes, L) — no
+        # O(K) work per event.
         def token_cond(st):
             return st[3].any()  # members remaining
 
@@ -122,8 +131,7 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             # ... or vs the speculative writes of remaining members ahead
             # of us (they commit clean, so speculative = actual for them)
             spec_hit = protocol.earlier_writer_conflicts(
-                _CompactRes(ra_c, rn_c, wa_c, wn_c), None, remaining,
-                lane_slot, n_obj)
+                compact_res, None, remaining, lane_slot, n_obj)
             bad = remaining & (accum_hit | spec_hit)
             f = jnp.min(jnp.where(bad, lane_slot, n_lanes))  # retry event
             clean = remaining & (lane_slot < f)
@@ -136,15 +144,21 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                     True, mode="drop")
 
             def do_retry(args):
-                # token held: re-execute against committed state, commit.
+                # token held: re-execute against committed state through
+                # the same masked path as the round's read phase (the
+                # retrying lane is the event's live set — the frozen
+                # oracle's token semantics admit exactly one lane per
+                # event, later conflicting lanes re-check against its
+                # committed writes first), then commit.
                 # NB: mark the RETRY's write set — the speculative write
                 # set may differ (data-dependent addresses) and marking it
                 # would hide conflicts from later round members.
                 values, versions, written = args
                 fc = jnp.clip(f, 0, n_lanes - 1)
-                row = jax.tree.map(lambda a: a[sel_txn[fc]], batch)
-                raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
-                del raddrs2, rn2
+                cres = run_live(compact_batch, values, lane_slot == fc,
+                                compact_res)
+                waddrs2, wvals2, wn2 = (cres.waddrs[fc], cres.wvals[fc],
+                                        cres.wn[fc])
                 values, versions = protocol.apply_writes(
                     values, versions, waddrs2, wvals2, wn2,
                     gv0 + sel_pos[fc] + 1)
@@ -183,22 +197,28 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         done = done | sel_t
         commit_round = jnp.where(sel_t, rnd, tr["commit_round"])
         tr = dict(tr, retries=retries, exec_ops=exec_ops,
-                  barrier_ops=barrier_ops, commit_round=commit_round)
-        return values, versions, done, rnd + 1, tr
+                  barrier_ops=barrier_ops, commit_round=commit_round,
+                  live_per_round=tr["live_per_round"].at[rnd].set(
+                      live_t.sum(dtype=jnp.int32)))
+        rs = protocol.commit_round_state(rs, values, versions)
+        return rs, done, rnd + 1, tr
 
     def cond(state):
-        _, _, done, rnd, _ = state
+        _, done, rnd, _ = state
         return (~done.all()) & (rnd < limit)
 
     limit = max_rounds if max_rounds is not None else k + 1
     tr0 = dict(commit_round=jnp.full((k,), -1, jnp.int32),
                retries=jnp.zeros((k,), jnp.int32),
                exec_ops=jnp.zeros((), jnp.int32),
-               barrier_ops=jnp.zeros((), jnp.int32))
-    values, versions, done, rnd, tr = jax.lax.while_loop(
+               barrier_ops=jnp.zeros((), jnp.int32),
+               live_per_round=jnp.full((limit,), -1, jnp.int32))
+    rs0 = protocol.init_round_state(batch, store.values, store.versions,
+                                    track_conflict=False)
+    rs, done, rnd, tr = jax.lax.while_loop(
         cond, round_body,
-        (store.values, store.versions, jnp.zeros((k,), bool),
-         jnp.zeros((), jnp.int32), tr0))
+        (rs0, jnp.zeros((k,), bool), jnp.zeros((), jnp.int32), tr0))
+    values, versions = rs.values, rs.versions
 
     # DeSTM's serialization is round-major: rounds commit in order, and
     # within a round the token order (= sequence order restricted to the
@@ -210,13 +230,16 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         commit_round=tr["commit_round"], retries=tr["retries"],
         rounds=rnd, exec_ops=tr["exec_ops"],
         barrier_ops=tr["barrier_ops"],
+        live_txns=rs.live_txns, live_slots=rs.live_slots,
+        live_per_round=tr["live_per_round"],
         # a txn executes only in its commit round
         first_round=tr["commit_round"], commit_pos=commit_pos)
     return TStore(values=values, versions=versions, gv=store.gv + k), trace
 
 
 destm_execute = jax.jit(
-    _destm_execute, static_argnames=("n_lanes", "max_rounds"))
+    _destm_execute,
+    static_argnames=("n_lanes", "max_rounds", "incremental"))
 
 
 def _destm_raw(store, batch, seq, lanes, n_lanes):

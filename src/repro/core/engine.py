@@ -68,6 +68,12 @@ class ExecTrace:
     validation_words: jax.Array  # () int32 — read-set words validated
     promotions: jax.Array    # ()   int32 — live promotions (§2.2.3, PCC)
     barrier_ops: jax.Array   # ()   int32 — barrier idle slots (DeSTM)
+    wave_trips: jax.Array    # ()   int32 — Σ wave_commit fixpoint trips (OCC)
+    live_txns: jax.Array     # ()   int32 — Σ rounds re-executed (live) txns
+    live_slots: jax.Array    # ()   int32 — Σ rounds live instruction slots
+    live_per_round: jax.Array  # (R,) int32 — live count per round, -1 pad
+    #   (R = the engine's static round limit; entries past `rounds` stay
+    #    -1.  Engines predating the RoundState loop leave it empty.)
 
     @property
     def n_txns(self) -> int:
@@ -77,6 +83,14 @@ class ExecTrace:
     def waves(self) -> jax.Array:
         """OCC-era name for :attr:`rounds` (kept for compatibility)."""
         return self.rounds
+
+    def live_counts(self):
+        """Per-round live (re-executed) transaction counts, trimmed to the
+        rounds actually run.  Host-syncs; empty for engines that did not
+        record them (legacy scans, PoGL)."""
+        import numpy as np
+        lpr = np.asarray(self.live_per_round)
+        return lpr[:int(self.rounds)] if lpr.size else lpr
 
 
 def make_trace(k: int, **overrides) -> ExecTrace:
@@ -94,6 +108,10 @@ def make_trace(k: int, **overrides) -> ExecTrace:
         validation_words=jnp.zeros((), jnp.int32),
         promotions=jnp.zeros((), jnp.int32),
         barrier_ops=jnp.zeros((), jnp.int32),
+        wave_trips=jnp.zeros((), jnp.int32),
+        live_txns=jnp.zeros((), jnp.int32),
+        live_slots=jnp.zeros((), jnp.int32),
+        live_per_round=jnp.zeros((0,), jnp.int32),
     )
     fields.update(overrides)
     return ExecTrace(**fields)

@@ -11,6 +11,9 @@ exactly — and build the paper's figures from them:
   (Fig. 9's "time waiting for turn").
 - ``work``: total instruction-slots executed including retries
   (speculation waste).
+- ``wave_trips`` / ``live_txns``: the engine-loop observables of PR 3 —
+  OCC's per-round conflict-chain depth (wave_commit fixpoint trips) and
+  the incremental read phase's actual re-execution count.
 
 Speculative instrumentation overhead (read-set tracking, write buffering,
 validation) is charged per tracked word, mirroring what the paper's Fig. 6
@@ -38,16 +41,20 @@ class EngineReport:
     fast_commits: int        # MODE_FAST commits (head of prefix)
     prefix_commits: int      # simultaneous-fast (promoted) commits
     throughput: float        # txns per critical-path op-slot
+    wave_trips: int = 0      # Σ wave_commit fixpoint iterations (OCC):
+    #                          contention cost of the commit decision
+    live_txns: int = 0       # Σ per-round re-executed (live) txns — the
+    #                          incremental loop's actual read-phase work
 
     def row(self) -> str:
         return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
                 f"{self.critical_path:.0f},{self.total_wait_rounds},"
                 f"{self.retries},{self.fast_commits},{self.prefix_commits},"
-                f"{self.throughput:.5f}")
+                f"{self.throughput:.5f},{self.wave_trips},{self.live_txns}")
 
 
 HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
-          "fast_commits,prefix_commits,throughput")
+          "fast_commits,prefix_commits,throughput,wave_trips,live_txns")
 
 
 def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
@@ -106,7 +113,8 @@ def _report_pot(trace, batch, res_rn, res_wn) -> EngineReport:
         retries=int(retries.sum()),
         fast_commits=int(fast.sum()),
         prefix_commits=int((mode == MODE_PREFIX).sum()),
-        throughput=k / cp if cp else float("inf"))
+        throughput=k / cp if cp else float("inf"),
+        live_txns=int(trace.live_txns))
 
 
 def _report_pogl(batch, res_rn, res_wn) -> EngineReport:
@@ -143,7 +151,8 @@ def _report_destm(trace, batch, res_rn, res_wn, n_lanes: int) -> EngineReport:
         name="destm", rounds=rounds, work_ops=float(np.sum(cost * (1 + retries))),
         critical_path=cp, total_wait_rounds=wait, retries=int(retries.sum()),
         fast_commits=0, prefix_commits=0,
-        throughput=k / cp if cp else float("inf"))
+        throughput=k / cp if cp else float("inf"),
+        live_txns=int(trace.live_txns))
 
 
 def _report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
@@ -163,7 +172,8 @@ def _report_occ(trace, batch, res_rn, res_wn) -> EngineReport:
         name="occ", rounds=waves, work_ops=float(np.sum(cost * (1 + retries))),
         critical_path=cp, total_wait_rounds=0, retries=int(retries.sum()),
         fast_commits=0, prefix_commits=0,
-        throughput=k / cp if cp else float("inf"))
+        throughput=k / cp if cp else float("inf"),
+        wave_trips=int(trace.wave_trips), live_txns=int(trace.live_txns))
 
 
 # -- deprecated per-engine entry points (pre-ExecTrace API) ---------------

@@ -30,35 +30,45 @@ from repro.core import protocol
 from repro.core.engine import (EngineDef, ExecTrace, make_trace,
                                rank_from_order, register_engine)
 from repro.core.tstore import TStore
-from repro.core.txn import TxnBatch, run_all
+from repro.core.txn import TxnBatch
 
 # The old per-engine trace dataclass is now the canonical schema.
 OccTrace = ExecTrace
 
 
 def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
-                 max_waves: int | None = None) -> tuple[TStore, ExecTrace]:
-    """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th."""
+                 max_waves: int | None = None,
+                 incremental: bool = True) -> tuple[TStore, ExecTrace]:
+    """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th.
+
+    ``incremental``: re-execute only the not-yet-committed transactions
+    each wave (masked ``run_live`` + carried conflict table through
+    ``protocol.RoundState``); False rebuilds per wave (PR 2 behavior).
+    Decision-identical — the wave rule only consumes pending rows.
+    """
     k = batch.n_txns
     n_obj = store.n_objects
     # arrival rank of each txn: one argsort's inverse, computed once
     rank = rank_from_order(arrival)
 
     def wave_body(state):
-        values, versions, done, n_comm, wave, tr = state
-        res = run_all(batch, values)
+        rs, done, n_comm, wave, tr = state
 
-        # --- batched conflict analysis + greedy wave fixpoint ------------
-        conflict = protocol.conflict_table(res, n_obj)
+        # --- masked read phase + carried conflict table ------------------
         pending_t = ~done
-        committing_t = protocol.wave_commit(
-            res, conflict, pending_t, rank, n_obj)
+        live = pending_t if incremental else jnp.ones((k,), bool)
+        rs = protocol.refresh_round_state(rs, batch, live)
+        res = rs.res
+
+        # --- greedy wave fixpoint (trip count = conflict-chain depth) ----
+        committing_t, trips = protocol.wave_commit(
+            res, rs.conflict, pending_t, rank, n_obj)
 
         # commit position = running count in arrival order; the cumsum
         # lives in position space, gathered back through each txn's rank
         commit_idx_t = n_comm + jnp.cumsum(committing_t[arrival])[rank] - 1
         values, versions = protocol.fused_write_back(
-            values, versions, res.waddrs, res.wvals, res.wn,
+            rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
             committing_t, rank, commit_idx_t + 1)
 
         commit_pos = jnp.maximum(tr["commit_pos"],
@@ -68,33 +78,45 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
             pending_t, batch.n_ins, 0).sum(dtype=jnp.int32)
         done = done | committing_t
         tr = dict(tr, commit_pos=commit_pos, retries=retries,
-                  exec_ops=exec_ops)
-        return (values, versions, done,
+                  exec_ops=exec_ops,
+                  wave_trips=tr["wave_trips"] + trips,
+                  live_per_round=tr["live_per_round"].at[wave].set(
+                      live.sum(dtype=jnp.int32)))
+        rs = protocol.commit_round_state(rs, values, versions)
+        return (rs, done,
                 n_comm + committing_t.sum(dtype=jnp.int32), wave + 1, tr)
 
     def cond(state):
-        _, _, done, _, wave, _ = state
+        _, done, _, wave, _ = state
         return (~done.all()) & (wave < limit)
 
     limit = max_waves if max_waves is not None else k + 1
     tr0 = dict(commit_pos=jnp.full((k,), -1, jnp.int32),
                retries=jnp.zeros((k,), jnp.int32),
-               exec_ops=jnp.zeros((), jnp.int32))
-    values, versions, done, n_comm, wave, tr = jax.lax.while_loop(
+               exec_ops=jnp.zeros((), jnp.int32),
+               wave_trips=jnp.zeros((), jnp.int32),
+               live_per_round=jnp.full((limit,), -1, jnp.int32))
+    rs0 = protocol.init_round_state(batch, store.values, store.versions)
+    rs, done, n_comm, wave, tr = jax.lax.while_loop(
         cond, wave_body,
-        (store.values, store.versions, jnp.zeros((k,), bool),
+        (rs0, jnp.zeros((k,), bool),
          jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), tr0))
 
     trace = make_trace(
         k,
         commit_pos=tr["commit_pos"], retries=tr["retries"],
         rounds=wave, exec_ops=tr["exec_ops"],
+        wave_trips=tr["wave_trips"],
+        live_txns=rs.live_txns, live_slots=rs.live_slots,
+        live_per_round=tr["live_per_round"],
         # a txn that retried r waves committed in wave r
         commit_round=tr["retries"])
-    return TStore(values=values, versions=versions, gv=store.gv + n_comm), trace
+    return TStore(values=rs.values, versions=rs.versions,
+                  gv=store.gv + n_comm), trace
 
 
-occ_execute = jax.jit(_occ_execute, static_argnames=("max_waves",))
+occ_execute = jax.jit(
+    _occ_execute, static_argnames=("max_waves", "incremental"))
 
 
 def _occ_raw(store, batch, seq, lanes, n_lanes):

@@ -8,7 +8,12 @@ Each engine round is three *batched* stages (the shared commit pipeline,
 
 1. **Speculative read phase** — every pending transaction executes
    (vmapped) against the committed store image (deferred updates, logged
-   footprints: OCC read phase, Fig. 2a/2b).
+   footprints: OCC read phase, Fig. 2a/2b).  Since PR 3 this is the
+   *masked* executor (``txn.run_live`` via ``protocol.RoundState``):
+   only the pending suffix re-executes, committed transactions keep
+   their cached results, and the conflict table is delta-updated rather
+   than rebuilt — per-round live counts land in
+   ``ExecTrace.live_per_round``.
 2. **Batched conflict analysis** — the paper's per-transaction
    validation question asked for the whole batch at once
    (``protocol.earlier_writer_conflicts``): on TPU a masked
@@ -63,7 +68,7 @@ from repro.core.engine import (MODE_FAST, MODE_PREFIX, MODE_SPEC, MODE_UNSET,
                                EngineDef, ExecTrace, make_trace,
                                rank_from_order, register_engine)
 from repro.core.tstore import TStore
-from repro.core.txn import TxnBatch, TxnResult, run_all, run_txn
+from repro.core.txn import TxnBatch, TxnResult, run_txn
 
 # The old per-engine trace dataclass is now the canonical schema.
 PccTrace = ExecTrace
@@ -71,7 +76,8 @@ PccTrace = ExecTrace
 
 def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                  max_rounds: int | None = None,
-                 live_promotion: bool = True) -> tuple[TStore, ExecTrace]:
+                 live_promotion: bool = True,
+                 incremental: bool = True) -> tuple[TStore, ExecTrace]:
     """Execute a batch of preordered transactions under PCC.
 
     Args:
@@ -85,6 +91,13 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
              store within the SAME round and commits unconditionally
              (its abort-and-retry-in-fast-mode path).  Halves the round
              count on conflict chains; False gives the Pot* ablation.
+      incremental: re-execute only the pending suffix each round
+             (masked ``run_live`` + carried conflict table via
+             ``protocol.RoundState``); False rebuilds everything per
+             round (the PR 2 behavior, kept for benchmarking and the
+             incremental-smoke equivalence gate).  Decision-identical:
+             committed transactions' rows are never consumed by the
+             prefix decision, so both paths commit bit-identically.
     Returns:
       (new store, trace).  ``new_store.gv`` equals ``store.gv + K``.
     """
@@ -96,17 +109,20 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     seq_nos = gv0 + 1 + rank   # version stamp per txn (its seq position)
 
     def round_body(state):
-        values, versions, gv, n_comm, rnd, tr = state
-        res: TxnResult = run_all(batch, values)
+        rs, gv, n_comm, rnd, tr = state
 
-        # --- batched conflict analysis + prefix fixpoint (txn space) -----
-        conflict = protocol.conflict_table(res, n_obj)
+        # --- masked read phase: only pending txns re-execute -------------
+        live = rank >= n_comm if incremental else jnp.ones((k,), bool)
+        rs = protocol.refresh_round_state(rs, batch, live)
+        res: TxnResult = rs.res
+
+        # --- carried conflict analysis + prefix fixpoint (txn space) -----
         committing_t = protocol.prefix_commit(
-            res, conflict, order, rank, n_comm, n_obj)
+            res, rs.conflict, order, rank, n_comm, n_obj)
 
         # --- fused write-back: the whole prefix in one scatter -----------
         values, versions = protocol.fused_write_back(
-            values, versions, res.waddrs, res.wvals, res.wn,
+            rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
             committing_t, rank, seq_nos)
 
         n_new = committing_t.sum(dtype=jnp.int32)
@@ -163,14 +179,17 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             + jnp.where(promoted_t, batch.n_ins,
                         0).sum(dtype=jnp.int32)  # promotion re-execution
         promotions = tr["promotions"] + promoted_t.sum(dtype=jnp.int32)
+        live_per_round = tr["live_per_round"].at[rnd].set(
+            live.sum(dtype=jnp.int32))
         tr = dict(tr, commit_round=commit_round, first_round=first_round,
                   retries=retries, mode=mode, wait_rounds=wait_rounds,
                   validation_words=validation_words, exec_ops=exec_ops,
-                  promotions=promotions)
-        return values, versions, gv, n_comm + n_new, rnd + 1, tr
+                  promotions=promotions, live_per_round=live_per_round)
+        rs = protocol.commit_round_state(rs, values, versions)
+        return rs, gv, n_comm + n_new, rnd + 1, tr
 
     def cond(state):
-        *_, n_comm, rnd, _ = state
+        _, _, n_comm, rnd, _ = state
         return (n_comm < k) & (rnd < limit)
 
     limit = max_rounds if max_rounds is not None else k + 1
@@ -183,10 +202,12 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         validation_words=jnp.zeros((), jnp.int32),
         exec_ops=jnp.zeros((), jnp.int32),
         promotions=jnp.zeros((), jnp.int32),
+        live_per_round=jnp.full((limit,), -1, jnp.int32),
     )
-    values, versions, gv, n_comm, rnd, tr = jax.lax.while_loop(
+    rs0 = protocol.init_round_state(batch, store.values, store.versions)
+    rs, gv, n_comm, rnd, tr = jax.lax.while_loop(
         cond, round_body,
-        (store.values, store.versions, store.gv, jnp.zeros((), jnp.int32),
+        (rs0, store.gv, jnp.zeros((), jnp.int32),
          jnp.zeros((), jnp.int32), tr0))
 
     trace = make_trace(
@@ -196,13 +217,16 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         wait_rounds=tr["wait_rounds"], rounds=rnd,
         validation_words=tr["validation_words"], exec_ops=tr["exec_ops"],
         promotions=tr["promotions"],
+        live_txns=rs.live_txns, live_slots=rs.live_slots,
+        live_per_round=tr["live_per_round"],
         # PCC commits in sequence order: position = rank in the order
         commit_pos=rank)
-    return TStore(values=values, versions=versions, gv=gv), trace
+    return TStore(values=rs.values, versions=rs.versions, gv=gv), trace
 
 
 pcc_execute = jax.jit(
-    _pcc_execute, static_argnames=("max_rounds", "live_promotion"))
+    _pcc_execute,
+    static_argnames=("max_rounds", "live_promotion", "incremental"))
 
 
 def _pcc_raw(store, batch, seq, lanes, n_lanes):

@@ -1,11 +1,38 @@
 """Shared pieces of the concurrency-control engines.
 
-Two layers:
+Three layers:
 
 **Scalar helpers** (`footprint_conflicts` / `mark_writes` /
 `apply_writes`) — the per-transaction primitives used by the serial
 paths (PoGL, PCC live promotion, DeSTM token-held retries) and by the
 preserved scan engines in :mod:`repro.core.legacy_scan`.
+
+**Incremental round state** (PR 3) — :class:`RoundState`, the
+persistent execution state every engine threads through its
+`lax.while_loop` rounds instead of rebuilding from scratch:
+
+* the committed store image (``values`` / ``versions``);
+* the cached per-transaction :class:`~repro.core.txn.TxnResult` —
+  :func:`refresh_round_state` re-executes only the *live* rows
+  (uncommitted/aborted transactions, via
+  :func:`repro.core.txn.run_live`) and keeps the settled rows' cached
+  results, so a low-contention round no longer pays a full-batch
+  ``run_all`` on already-committed transactions;
+* the carried conflict structure — the K×K ``conflict`` table plus,
+  on TPU, the bit-packed footprints behind it
+  (``kernels.ops.update_packed_footprints``): only the rows/columns of
+  re-executed transactions are recomputed per round, via the
+  masked-row variant of the bitset-intersection Pallas kernel
+  (``kernels.conflict.conflict_matrix_bits_delta``; dense
+  recompute-and-select fallback off-TPU).
+
+Correctness rests on one invariant: an engine's commit decision only
+ever *consumes* conflict entries and footprint rows of transactions
+that are still pending — and every pending transaction is live, hence
+refreshed.  Settled rows go stale in the cache but are masked out of
+every reduction, so the incremental loop is bit-identical to the
+from-scratch rebuild (``incremental=False`` on every engine, asserted
+by tests and by ``scripts/ci.sh --incremental-smoke``).
 
 **Vectorized commit pipeline** (PR 2) — the batched commit machinery
 shared by PCC / OCC / DeSTM.  Instead of walking K transactions through
@@ -13,15 +40,14 @@ a `lax.scan` with an O(n_objects) bitmap probe and a `lax.cond`
 write-back each (K sequential device steps per round), a round is three
 batched stages:
 
-1. :func:`conflict_table` — (on TPU) the K×K footprint-conflict matrix
-   (`kernels.ops.conflict_matrix`: tiled bitset-intersection Pallas
-   kernel over bit-packed address sets, with a dense-mask matmul
-   reference fallback in ops.py);
+1. conflict analysis — the carried ``RoundState.conflict`` table
+   (:func:`conflict_table` builds the from-scratch equivalent);
 2. a commit *decision* — :func:`prefix_commit` (the maximal in-order
    prefix, an `associative_scan` cumulative-AND: ≤⌈log₂K⌉ device
    steps) or :func:`wave_commit` (OCC's greedy arrival-order kernel, a
    fixpoint that converges in the conflict-chain depth, one batched
-   step per iteration).  Both consume
+   step per iteration; its trip count is surfaced in
+   ``ExecTrace.wave_trips``).  Both consume
    :func:`earlier_writer_conflicts`, which answers "does position p's
    footprint hit the writes of a marked position q < p" either as a
    masked row-reduction of the conflict matrix (TPU: regular,
@@ -36,16 +62,19 @@ batched stages:
    both the per-transaction apply chain and per-transaction
    last-writer dedup.
 
-All three stages reproduce the scan engines' decisions bit-exactly
+All stages reproduce the scan engines' decisions bit-exactly
 (tests/test_commit_pipeline.py asserts equality against
 `legacy_scan` and a pure-NumPy reference on random batches).
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.txn import TxnBatch, TxnResult, run_live
 from repro.kernels import ops as kernel_ops
 
 
@@ -158,6 +187,133 @@ def conflict_table(res, n_objects: int,
         res.raddrs, res.rn, res.waddrs, res.wn, n_objects)
 
 
+# --------------------------------------------------------------------------
+# Incremental round state (PR 3)
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundState:
+    """Persistent per-batch execution state threaded through an engine's
+    `lax.while_loop` rounds.
+
+    ``res`` caches every transaction's last speculative execution; a
+    round calls :func:`refresh_round_state` with the mask of *live*
+    (still-pending) transactions and only those rows re-execute — the
+    paper's abort-and-retry, restricted to the transactions it actually
+    applies to.  ``conflict`` (and on TPU the packed ``foot_bits`` /
+    ``write_bits`` behind it) is carried the same way: suffix footprints
+    change only via re-execution, so only live rows/columns are
+    recomputed.  ``live_txns`` / ``live_slots`` accumulate the actual
+    re-execution work for the trace (the observable proving settled
+    transactions are skipped).
+
+    ``conflict``/``foot_bits``/``write_bits`` are ``None`` when the
+    engine uses the scatter-min conflict formulation (off-TPU default)
+    or carries no table at all (DeSTM's compact-block rounds); the
+    choice is static per trace, so the pytree structure is while_loop-
+    stable.
+    """
+
+    values: jax.Array        # (O, S) committed store image
+    versions: jax.Array      # (O,)
+    res: TxnResult           # cached speculative executions (K rows)
+    conflict: jax.Array | None    # (K, K) carried conflict table
+    foot_bits: jax.Array | None   # (K, W) packed footprints (TPU path)
+    write_bits: jax.Array | None  # (K, W) packed write sets (TPU path)
+    live: jax.Array          # (K,) bool — rows refreshed this round
+    live_txns: jax.Array     # () int32 — Σ rounds live count
+    live_slots: jax.Array    # () int32 — Σ rounds live instruction slots
+
+
+def init_round_state(batch: TxnBatch, values: jax.Array,
+                     versions: jax.Array, *,
+                     track_conflict: bool = True,
+                     use_matrix: bool | None = None) -> RoundState:
+    """A fresh RoundState with empty caches.
+
+    ``track_conflict=False`` (DeSTM) carries no table — the engine asks
+    its conflict questions on a compacted per-round block instead.
+    ``use_matrix`` follows :func:`conflict_table`'s backend dispatch:
+    when the scatter-min formulation is in use there is no table to
+    carry either.  Cache rows start zeroed; the caller's invariant is
+    that every row is refreshed (appears in a ``refresh_round_state``
+    live mask) no later than the first round in which it is consumed —
+    PCC/OCC satisfy it by making every pending transaction live, DeSTM
+    by making exactly the round's members live (a member's row is only
+    ever consumed in its own round).
+    """
+    if use_matrix is None:
+        use_matrix = _matrix_backend()
+    k, length = batch.opcodes.shape
+    n_obj, slot = values.shape
+    z = jnp.zeros
+    res = TxnResult(
+        raddrs=z((k, length), jnp.int32), rn=z((k,), jnp.int32),
+        waddrs=z((k, length), jnp.int32),
+        wvals=z((k, length, slot), jnp.int32), wn=z((k,), jnp.int32))
+    conflict = foot_bits = write_bits = None
+    if track_conflict and use_matrix:
+        conflict = z((k, k), bool)
+        if kernel_ops._on_tpu():
+            w = -(-n_obj // 32)
+            foot_bits = z((k, w), jnp.int32)
+            write_bits = z((k, w), jnp.int32)
+    return RoundState(
+        values=values, versions=versions, res=res, conflict=conflict,
+        foot_bits=foot_bits, write_bits=write_bits,
+        live=z((k,), bool), live_txns=z((), jnp.int32),
+        live_slots=z((), jnp.int32))
+
+
+def refresh_round_state(state: RoundState, batch: TxnBatch,
+                        live: jax.Array) -> RoundState:
+    """One round's incremental read phase: re-execute the live rows
+    against the current store image and delta-update the carried
+    conflict structure.
+
+    Post-conditions (tests/test_round_state.py):
+
+    * ``res`` rows with ``live`` equal the same rows of a from-scratch
+      ``run_all(batch, state.values)``; settled rows are carried
+      bit-exactly;
+    * ``conflict`` entries (i, j) with ``live[i] or live[j]`` equal the
+      from-scratch table built from the merged ``res``; entries between
+      two settled transactions keep last round's verdict (they are
+      stale but, by the pending ⊆ live invariant, never consumed).
+    """
+    res = run_live(batch, state.values, live, state.res)
+    conflict, foot_bits, write_bits = (
+        state.conflict, state.foot_bits, state.write_bits)
+    if conflict is not None:
+        n_obj = state.values.shape[0]
+        if foot_bits is not None:   # TPU: packed bitsets + masked kernel
+            foot_bits, write_bits = kernel_ops.update_packed_footprints(
+                foot_bits, write_bits, res.raddrs, res.rn, res.waddrs,
+                res.wn, live, n_obj)
+            conflict = kernel_ops.conflict_matrix_delta(
+                foot_bits, write_bits, conflict, live, n_obj)
+        else:                       # dense recompute-and-select fallback
+            fresh = kernel_ops._conflict_matrix_dense(
+                res.raddrs, res.rn, res.waddrs, res.wn, n_obj)
+            refresh = live[:, None] | live[None, :]
+            conflict = jnp.where(refresh, fresh, conflict)
+    return RoundState(
+        values=state.values, versions=state.versions, res=res,
+        conflict=conflict, foot_bits=foot_bits, write_bits=write_bits,
+        live=live,
+        live_txns=state.live_txns + live.sum(dtype=jnp.int32),
+        live_slots=state.live_slots
+        + jnp.where(live, batch.n_ins, 0).sum(dtype=jnp.int32))
+
+
+def commit_round_state(state: RoundState, values: jax.Array,
+                       versions: jax.Array) -> RoundState:
+    """Fold a round's committed store image back into the carried state."""
+    return dataclasses.replace(state, values=values, versions=versions)
+
+
 def earlier_writer_conflicts(res, conflict, writer_mask: jax.Array,
                              rank: jax.Array, n_objects: int) -> jax.Array:
     """bad (K,) bool, txn space: does txn t's footprint (reads ∪ writes)
@@ -230,17 +386,23 @@ def wave_commit(res, conflict, pending: jax.Array, rank: jax.Array,
     reaches the unique solution in at most the conflict-chain depth:
     a txn's verdict is final once all its conflict predecessors'
     verdicts are, by induction along the order.
+
+    Returns ``(committing, trips)`` — ``trips`` () int32 counts fixpoint
+    iterations (≥ 1; the final converging check is included), i.e. the
+    wave's conflict-chain depth + 1.  Engines accumulate it into
+    ``ExecTrace.wave_trips`` so contention cost is observable per round.
     """
 
     def body(state):
-        c, _ = state
+        c, _, trips = state
         blocked = earlier_writer_conflicts(res, conflict, c, rank, n_objects)
         c_next = pending & ~blocked
-        return c_next, (c_next == c).all()
+        return c_next, (c_next == c).all(), trips + 1
 
-    c, _ = jax.lax.while_loop(lambda s: ~s[1], body,
-                              (pending, jnp.asarray(False)))
-    return c
+    c, _, trips = jax.lax.while_loop(
+        lambda s: ~s[1], body,
+        (pending, jnp.asarray(False), jnp.zeros((), jnp.int32)))
+    return c, trips
 
 
 def fused_write_back(values, versions, waddrs, wvals, wn, committing,

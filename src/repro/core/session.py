@@ -170,6 +170,18 @@ class PotSession:
             self._log_batches += 1
         return list(self._log)
 
+    def live_counts(self) -> list[np.ndarray]:
+        """Per-round live (re-executed) transaction counts, one array per
+        submitted batch, trimmed to the rounds each batch actually ran.
+
+        The observable behind the incremental round loop (PR 3): at low
+        contention the counts collapse after round 0 because committed
+        transactions stop re-executing; engines that predate the
+        RoundState loop (legacy scans) return empty arrays.  Host-syncs
+        the recorded traces — keep off the streaming hot path.
+        """
+        return [t.live_counts() for t in self.traces]
+
     def replay_sequencer(self) -> ReplaySequencer:
         """A sequencer that replays this session's commit order — feed it
         to a fresh ``PotSession`` with the same batches (paper §2.1)."""

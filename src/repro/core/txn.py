@@ -151,3 +151,41 @@ def run_all(batch: TxnBatch, values: jax.Array) -> TxnResult:
     raddrs, rn, waddrs, wvals, wn = jax.vmap(run_txn, in_axes=(0, None))(
         batch, values)
     return TxnResult(raddrs=raddrs, rn=rn, waddrs=waddrs, wvals=wvals, wn=wn)
+
+
+def run_live(batch: TxnBatch, values: jax.Array, live: jax.Array,
+             cache: TxnResult | None = None) -> TxnResult:
+    """Masked re-execution: run only the *live* transactions, reuse cached
+    rows for the settled ones.
+
+    ``live`` (K,) bool selects the transactions whose speculation is stale
+    (uncommitted/aborted rows that must re-read the new store image);
+    settled rows keep their ``cache`` entry untouched.  Dead lanes run
+    with ``n_ins`` masked to 0 so every instruction predicate is false —
+    the vmapped scan still walks the (K, L) grid (shapes are static under
+    jit) but a dead lane's instruction slots are inert, which is exactly
+    the live-slot work model the engines account (``ExecTrace.live_slots``
+    vs ``rounds * sum(n_ins)`` for a from-scratch ``run_all`` per round).
+
+    A live row's result is bit-identical to the same row of
+    ``run_all(batch, values)``: execution is per-transaction pure, so
+    masking the other lanes cannot change it (asserted in
+    tests/test_round_state.py).
+
+    With ``cache=None`` dead rows come back zeroed (rn = wn = 0) — only
+    valid when every consumer masks by ``live``, e.g. the first round of
+    an engine loop where ``live`` is all-true.
+    """
+    masked = TxnBatch(
+        opcodes=batch.opcodes, addrs=batch.addrs, indirect=batch.indirect,
+        operands=batch.operands,
+        n_ins=jnp.where(live, batch.n_ins, 0))
+    fresh = run_all(masked, values)
+    if cache is None:
+        return fresh
+
+    def merge(new, old):
+        mask = live.reshape(live.shape + (1,) * (new.ndim - 1))
+        return jnp.where(mask, new, old)
+
+    return jax.tree.map(merge, fresh, cache)

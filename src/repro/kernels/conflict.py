@@ -19,6 +19,13 @@ validate.py, lifted from a vector to a matrix of verdicts).  The commit
 decision then becomes a prefix fixpoint over this matrix
 (protocol.prefix_commit / protocol.wave_commit) in O(log K) device steps
 instead of a K-step `lax.scan`.
+
+Incremental rounds (PR 3) carry the matrix across engine rounds instead
+of rebuilding it: footprints change only via re-execution, so
+conflict_matrix_bits_delta recomputes just the rows/columns of the
+round's live transactions (masked-row variant of the same kernel —
+blocks with no live row/column skip the intersection and carry last
+round's tile).
 """
 
 from __future__ import annotations
@@ -48,6 +55,68 @@ def _conflict_kernel(foot_ref, write_ref, out_ref):
     @pl.when(pl.program_id(2) != 0)
     def _accum():
         out_ref[...] = out_ref[...] | tile.astype(jnp.int32)
+
+
+def _conflict_delta_kernel(rowlive_ref, collive_ref, foot_ref, write_ref,
+                           old_ref, out_ref):
+    """Masked-row variant of :func:`_conflict_kernel` for the incremental
+    round update: only entries whose row OR column transaction re-executed
+    this round are recomputed; the rest of the tile is carried over from
+    ``old_ref``.  Blocks with no live row/column skip the bitset
+    intersection entirely (`pl.when` on the tile's refresh mask) — the
+    device-work saving that makes carrying the table across rounds pay.
+    """
+    rl = rowlive_ref[...] != 0                             # (BI, 1)
+    cl = collive_ref[...] != 0                             # (BJ, 1)
+    refresh = rl | cl.reshape(1, -1)                       # (BI, BJ)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        # stale entries keep the carried verdict; refreshed entries start
+        # from 0 and OR-accumulate across the word grid axis below
+        out_ref[...] = jnp.where(refresh, 0, old_ref[...])
+
+    @pl.when(refresh.sum() > 0)
+    def _accum():
+        foot = foot_ref[...]                               # (BI, BW)
+        write = write_ref[...]                             # (BJ, BW)
+        hit = (foot[:, None, :] & write[None, :, :]) != 0  # (BI, BJ, BW)
+        tile = (hit.sum(axis=2) > 0).astype(jnp.int32)     # (BI, BJ)
+        out_ref[...] = out_ref[...] | jnp.where(refresh, tile, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conflict_matrix_bits_delta(foot_bits: jax.Array, write_bits: jax.Array,
+                               old: jax.Array, live: jax.Array,
+                               *, interpret: bool = False) -> jax.Array:
+    """Incremental (K, K) conflict update: recompute only the rows and
+    columns of live (re-executed) transactions, carry ``old`` elsewhere.
+
+    foot_bits / write_bits (K, W) int32 must already hold the CURRENT
+    round's packed sets (live rows refreshed, settled rows carried —
+    see ops.update_packed_footprints); ``old`` (K, K) int32 is last
+    round's table and ``live`` (K,) int32 flags the re-executed rows.
+    Same padding contract as :func:`conflict_matrix_bits`.
+    """
+    k, w = foot_bits.shape
+    assert k % BI == 0 and k % BJ == 0 and w % BW == 0, (k, w)
+    grid = (k // BI, k // BJ, w // BW)
+    live_col = live.astype(jnp.int32).reshape(k, 1)
+    out = pl.pallas_call(
+        _conflict_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BI, 1), lambda i, j, v: (i, 0)),
+            pl.BlockSpec((BJ, 1), lambda i, j, v: (j, 0)),
+            pl.BlockSpec((BI, BW), lambda i, j, v: (i, v)),
+            pl.BlockSpec((BJ, BW), lambda i, j, v: (j, v)),
+            pl.BlockSpec((BI, BJ), lambda i, j, v: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ), lambda i, j, v: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.int32),
+        interpret=interpret,
+    )(live_col, live_col, foot_bits, write_bits, old)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -92,6 +92,71 @@ def conflict_matrix(raddrs: jax.Array, rn: jax.Array, waddrs: jax.Array,
     return out[:k, :k]
 
 
+def packed_footprints(raddrs: jax.Array, rn: jax.Array, waddrs: jax.Array,
+                      wn: jax.Array, n_objects: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Bit-pack a batch's (footprint, write-set) address sets into
+    (K, ceil(O/32)) int32 words — the carried representation behind the
+    incremental conflict table (protocol.RoundState)."""
+    read_bits = _val.pack_addr_sets(raddrs, rn, n_objects)
+    write_bits = _val.pack_addr_sets(waddrs, wn, n_objects)
+    return read_bits | write_bits, write_bits
+
+
+def update_packed_footprints(foot_bits: jax.Array, write_bits: jax.Array,
+                             raddrs: jax.Array, rn: jax.Array,
+                             waddrs: jax.Array, wn: jax.Array,
+                             live: jax.Array, n_objects: int
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Carry packed footprints across engine rounds: re-pack only the rows
+    of live (re-executed) transactions, keep settled rows' words.
+
+    Dead rows are packed with their counts masked to 0 (cheap — packing is
+    O(K·L) scatter work either way) and then dropped by the merge, so the
+    output rows for settled transactions are bit-identical to the carried
+    state from the round they last executed in.
+    """
+    fresh_foot, fresh_write = packed_footprints(
+        raddrs, jnp.where(live, rn, 0), waddrs, jnp.where(live, wn, 0),
+        n_objects)
+    keep = live[:, None]
+    return (jnp.where(keep, fresh_foot, foot_bits),
+            jnp.where(keep, fresh_write, write_bits))
+
+
+def conflict_matrix_delta(foot_bits: jax.Array, write_bits: jax.Array,
+                          old: jax.Array, live: jax.Array,
+                          n_objects: int) -> jax.Array:
+    """Incremental conflict-table update over carried packed footprints:
+    entry (i, j) is recomputed iff transaction i or j re-executed this
+    round (``live``), otherwise last round's verdict is carried.
+
+    On TPU this is the masked-row variant of the bitset-intersection
+    Pallas kernel (conflict.conflict_matrix_bits_delta — dead blocks skip
+    the intersection); elsewhere a dense recompute-and-select fallback
+    with identical verdicts (asserted in tests/test_kernels.py).
+    ``old`` is (K, K) bool, ``foot_bits``/``write_bits`` are the (K, W)
+    packed sets ALREADY refreshed for live rows.
+    """
+    k = foot_bits.shape[0]
+    on_tpu = _on_tpu()
+    rows = max(_conf.BI, _conf.BJ)
+    fb = _pad_to(_pad_to(foot_bits, rows, 0), _conf.BW, 1)
+    wb = _pad_to(_pad_to(write_bits, rows, 0), _conf.BW, 1)
+    kp = fb.shape[0]
+    old_p = _pad_to(_pad_to(old.astype(jnp.int32), rows, 0), rows, 1)
+    live_p = _pad_to(live.astype(jnp.int32), rows, 0)
+    if on_tpu:
+        out = _conf.conflict_matrix_bits_delta(fb, wb, old_p, live_p,
+                                               interpret=False)
+        return out[:k, :k] != 0
+    # dense fallback: full bitset "matmul", then carry stale entries
+    hit = (fb[:, None, :] & wb[None, :, :]) != 0
+    fresh = hit.any(axis=2)[:k, :k]
+    refresh = live[:, None].astype(bool) | live[None, :].astype(bool)
+    return jnp.where(refresh, fresh, old)
+
+
 def adamw_update(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999,
                  eps=1e-8, wd=0.01):
     """Fast-mode fused AdamW over an arbitrary-shaped parameter leaf."""

@@ -92,7 +92,7 @@ def _wave_pos(res, arrival, pending_pos, n_objects, use_matrix=False):
     pending_t = np.zeros(len(arrival_np), bool)
     pending_t[arrival_np] = pending_pos
     conflict = protocol.conflict_table(res, n_objects, use_matrix=use_matrix)
-    committing_t = protocol.wave_commit(
+    committing_t, _trips = protocol.wave_commit(
         res, conflict, jnp.asarray(pending_t), rank, n_objects)
     return np.asarray(committing_t)[arrival_np]
 

@@ -144,6 +144,78 @@ def test_conflict_matrix_paths_agree():
     np.testing.assert_array_equal(dense, packed)
 
 
+@pytest.mark.parametrize("live_frac", [0.0, 0.3, 1.0])
+def test_conflict_matrix_delta_kernel_vs_full(live_frac):
+    """The masked-row delta kernel recomputes exactly the live rows and
+    columns and carries the stale entries (incl. the all-dead and
+    all-live extremes)."""
+    rng = np.random.default_rng(int(live_frac * 10) + 1)
+    k = max(conflict_mod.BI, conflict_mod.BJ)
+    w = 2 * conflict_mod.BW   # two word blocks: delta must OR-accumulate
+    mk = lambda d: jnp.asarray((rng.random((k, w)) < d) *
+                               rng.integers(0, 2**31, (k, w)), jnp.int32)
+    old_write = mk(0.05)
+    old_foot = mk(0.2) | old_write
+    old = conflict_matrix_bits(old_foot, old_write,
+                               interpret=True).astype(jnp.int32)
+    live = jnp.asarray(rng.random(k) < live_frac, jnp.int32)
+    keep = live[:, None].astype(bool)
+    new_write = jnp.where(keep, mk(0.05), old_write)
+    new_foot = jnp.where(keep, mk(0.2) | new_write, old_foot)
+    got = np.asarray(conflict_mod.conflict_matrix_bits_delta(
+        new_foot, new_write, old, live, interpret=True)) != 0
+    full = np.asarray(conflict_matrix_bits(new_foot, new_write,
+                                           interpret=True))
+    lv = np.asarray(live).astype(bool)
+    exp = np.where(lv[:, None] | lv[None, :], full, np.asarray(old) != 0)
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_update_packed_footprints_refreshes_live_rows_only():
+    rng = np.random.default_rng(8)
+    k, l, n_objects = 12, 5, 100
+    mk = lambda: (jnp.asarray(rng.integers(0, n_objects, (k, l)), jnp.int32),
+                  jnp.asarray(rng.integers(0, l + 1, (k,)), jnp.int32))
+    ra0, rn0 = mk()
+    wa0, wn0 = mk()
+    foot0, write0 = ops.packed_footprints(ra0, rn0, wa0, wn0, n_objects)
+    ra1, rn1 = mk()
+    wa1, wn1 = mk()
+    live = jnp.asarray(rng.random(k) < 0.4)
+    foot, write = ops.update_packed_footprints(
+        foot0, write0, ra1, rn1, wa1, wn1, live, n_objects)
+    exp_foot, exp_write = ops.packed_footprints(ra1, rn1, wa1, wn1, n_objects)
+    lv = np.asarray(live)
+    np.testing.assert_array_equal(np.asarray(foot)[lv],
+                                  np.asarray(exp_foot)[lv])
+    np.testing.assert_array_equal(np.asarray(write)[lv],
+                                  np.asarray(exp_write)[lv])
+    np.testing.assert_array_equal(np.asarray(foot)[~lv],
+                                  np.asarray(foot0)[~lv])
+    np.testing.assert_array_equal(np.asarray(write)[~lv],
+                                  np.asarray(write0)[~lv])
+
+
+def test_conflict_matrix_delta_op_dense_fallback():
+    """ops.conflict_matrix_delta's dense fallback (the off-TPU path)
+    matches the where-select semantics on unpadded shapes."""
+    rng = np.random.default_rng(13)
+    k, l, n_objects = 17, 4, 70
+    mk = lambda: (jnp.asarray(rng.integers(0, n_objects, (k, l)), jnp.int32),
+                  jnp.asarray(rng.integers(0, l + 1, (k,)), jnp.int32))
+    ra, rn = mk()
+    wa, wn = mk()
+    foot, write = ops.packed_footprints(ra, rn, wa, wn, n_objects)
+    old = jnp.asarray(rng.random((k, k)) < 0.2)
+    live = jnp.asarray(rng.random(k) < 0.5)
+    got = np.asarray(ops.conflict_matrix_delta(foot, write, old, live,
+                                               n_objects))
+    full = np.asarray(ops._conflict_matrix_dense(ra, rn, wa, wn, n_objects))
+    lv = np.asarray(live)
+    exp = np.where(lv[:, None] | lv[None, :], full, np.asarray(old))
+    np.testing.assert_array_equal(got, exp)
+
+
 # ------------------------------------------------------------- fused adamw
 @pytest.mark.parametrize("shape", [(256, 256), (3, 700), (1, 1), (512, 512),
                                    (1000,)])

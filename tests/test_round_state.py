@@ -1,0 +1,246 @@
+"""Tests for the incremental round state (PR 3).
+
+Three layers of guarantees:
+
+* ``txn.run_live`` — masked re-execution equals a full ``run_all`` on the
+  live rows and carries the cache bit-exactly on the settled rows
+  (fixed K in {1, 2, 64} plus a hypothesis property);
+* ``protocol.refresh_round_state`` — the carried/delta conflict table
+  equals a per-round from-scratch rebuild on every refreshed entry, for
+  random multi-round simulations at high and low contention;
+* the engines — ``incremental=True`` (masked loop, carried state) and
+  ``incremental=False`` (PR 2 full rebuild) produce bit-identical stores
+  and traces, and the incremental path's live counts prove settled
+  transactions are skipped.  (Bit-exactness vs the frozen legacy scans
+  is asserted in tests/test_commit_pipeline.py — the engines under test
+  there now run the incremental loop by default.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (READ, RMW, WRITE, RoundRobinSequencer, destm_execute,
+                        fingerprint, make_batch, make_store, occ_execute,
+                        pcc_execute, run_all)
+from repro.core import protocol
+from repro.core import workloads as W
+from repro.core.txn import run_live
+from repro.kernels.ops import _conflict_matrix_dense
+
+
+def _wl(k: int, contention: str, seed: int = 0) -> W.Workload:
+    if contention == "low":
+        return W.counters(n_txns=k, n_objects=max(64, 8 * k), n_reads=2,
+                          n_writes=2, n_lanes=min(8, k), skew=0.0, seed=seed)
+    return W.counters(n_txns=k, n_objects=max(4, k // 4), n_reads=2,
+                      n_writes=2, n_lanes=min(8, k), skew=1.0, seed=seed)
+
+
+def _seq_for(wl):
+    seqr = RoundRobinSequencer(n_root_lanes=wl.n_lanes)
+    return jnp.asarray(seqr.order_for(wl.lanes.tolist()), jnp.int32)
+
+
+# ------------------------------------------------------------- run_live
+@pytest.mark.parametrize("k", [1, 2, 64])
+@pytest.mark.parametrize("contention", ["low", "high"])
+def test_run_live_equals_run_all_on_live_rows(k, contention):
+    wl = _wl(k, contention, seed=k)
+    store = make_store(wl.n_objects, init=np.arange(wl.n_objects) % 7)
+    rng = np.random.default_rng(k)
+    live = jnp.asarray(rng.random(k) < 0.5)
+    full = run_all(wl.batch, store.values)
+    got = run_live(wl.batch, store.values, live)
+    lv = np.asarray(live)
+    for f in ("raddrs", "rn", "waddrs", "wvals", "wn"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f))[lv], np.asarray(getattr(full, f))[lv],
+            err_msg=f"live rows of {f} diverged from run_all")
+
+
+def test_run_live_carries_cache_on_settled_rows():
+    wl = _wl(16, "high", seed=3)
+    store = make_store(wl.n_objects)
+    cache = run_all(wl.batch, store.values)
+    # change the store; settled rows must still show the OLD results
+    values2 = store.values + 5
+    live = jnp.asarray(np.arange(16) % 3 == 0)
+    got = run_live(wl.batch, values2, live, cache)
+    lv = np.asarray(live)
+    full2 = run_all(wl.batch, values2)
+    for f in ("raddrs", "rn", "waddrs", "wvals", "wn"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f))[~lv], np.asarray(getattr(cache, f))[~lv])
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f))[lv], np.asarray(getattr(full2, f))[lv])
+
+
+@st.composite
+def live_cases(draw):
+    n_objects = draw(st.sampled_from([4, 8, 16]))
+    k = draw(st.integers(1, 10))
+    progs = []
+    for _ in range(k):
+        n_ins = draw(st.integers(1, 5))
+        progs.append([
+            (draw(st.sampled_from([READ, WRITE, RMW])),
+             draw(st.integers(0, n_objects - 1)),
+             draw(st.booleans()), draw(st.integers(-3, 3)))
+            for _ in range(n_ins)])
+    live = [draw(st.booleans()) for _ in range(k)]
+    return n_objects, progs, live
+
+
+@settings(max_examples=30, deadline=None)
+@given(live_cases())
+def test_property_run_live_masks_exactly(case):
+    n_objects, progs, live = case
+    batch = make_batch(progs)
+    store = make_store(n_objects, init=np.arange(n_objects) % 5)
+    live = jnp.asarray(live)
+    full = run_all(batch, store.values)
+    got = run_live(batch, store.values, live)
+    lv = np.asarray(live)
+    for f in ("raddrs", "rn", "waddrs", "wvals", "wn"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f))[lv], np.asarray(getattr(full, f))[lv])
+    # dead rows with no cache are inert (empty footprints)
+    assert not np.asarray(got.rn)[~lv].any()
+    assert not np.asarray(got.wn)[~lv].any()
+
+
+# --------------------------------------------- carried conflict tables
+@pytest.mark.parametrize("k", [1, 2, 64])
+@pytest.mark.parametrize("contention", ["low", "high"])
+def test_delta_conflict_table_equals_rebuild_over_rounds(k, contention):
+    """Simulated engine rounds: shrink the live set, mutate the store,
+    and check every refreshed entry of the carried table against a
+    from-scratch rebuild of the merged results (dense delta fallback)."""
+    wl = _wl(k, contention, seed=11 + k)
+    store = make_store(wl.n_objects)
+    st_ = protocol.init_round_state(wl.batch, store.values, store.versions,
+                                    use_matrix=True)
+    rng = np.random.default_rng(k)
+    live = np.ones(k, bool)
+    for rnd in range(4):
+        st_ = protocol.refresh_round_state(st_, wl.batch, jnp.asarray(live))
+        fresh = np.asarray(_conflict_matrix_dense(
+            st_.res.raddrs, st_.res.rn, st_.res.waddrs, st_.res.wn,
+            wl.n_objects))
+        refreshed = live[:, None] | live[None, :]
+        np.testing.assert_array_equal(
+            np.asarray(st_.conflict)[refreshed], fresh[refreshed],
+            err_msg=f"round {rnd}: refreshed entries diverged from rebuild")
+        # live rows of the cached result equal a full run_all
+        full = run_all(wl.batch, st_.values)
+        np.testing.assert_array_equal(
+            np.asarray(st_.res.waddrs)[live], np.asarray(full.waddrs)[live])
+        # a "commit": bump a random object, settle ~half the live txns
+        st_ = protocol.commit_round_state(
+            st_, st_.values.at[int(rng.integers(wl.n_objects))].add(1),
+            st_.versions)
+        live = live & (rng.random(k) < 0.5)
+
+
+def test_refresh_accumulates_live_work():
+    wl = _wl(8, "low", seed=2)
+    store = make_store(wl.n_objects)
+    st_ = protocol.init_round_state(wl.batch, store.values, store.versions)
+    st_ = protocol.refresh_round_state(st_, wl.batch,
+                                       jnp.ones((8,), bool))
+    st_ = protocol.refresh_round_state(st_, wl.batch,
+                                       jnp.asarray(np.arange(8) < 2))
+    assert int(st_.live_txns) == 8 + 2
+    n_ins = np.asarray(wl.batch.n_ins)
+    assert int(st_.live_slots) == int(n_ins.sum() + n_ins[:2].sum())
+
+
+# ------------------------------------------- incremental == rebuild
+@pytest.mark.parametrize("k", [1, 2, 64])
+@pytest.mark.parametrize("contention", ["low", "high"])
+def test_engines_incremental_equals_rebuild(k, contention):
+    wl = _wl(k, contention, seed=23 + k)
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    lanes = jnp.asarray(wl.lanes, jnp.int32)
+    arrival = jnp.argsort(seq)
+    runs = {
+        "pcc": lambda inc: pcc_execute(store, wl.batch, seq,
+                                       incremental=inc),
+        "occ": lambda inc: occ_execute(store, wl.batch, arrival,
+                                       incremental=inc),
+        "destm": lambda inc: destm_execute(store, wl.batch, seq, lanes,
+                                           wl.n_lanes, incremental=inc),
+    }
+    for name, run in runs.items():
+        out_inc, t_inc = run(True)
+        out_reb, t_reb = run(False)
+        assert int(fingerprint(out_inc)) == int(fingerprint(out_reb)), name
+        np.testing.assert_array_equal(np.asarray(out_inc.versions),
+                                      np.asarray(out_reb.versions))
+        for f in ("commit_pos", "retries", "commit_round", "rounds",
+                  "exec_ops", "wave_trips"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(t_inc, f)), np.asarray(getattr(t_reb, f)),
+                err_msg=f"{name}: trace field {f!r} diverged")
+        # the rebuild loop re-executes everything, every round
+        assert int(t_reb.live_txns) == int(t_reb.rounds) * k
+        assert int(t_inc.live_txns) <= int(t_reb.live_txns), name
+
+
+def test_pcc_live_counts_shrink_with_commits():
+    """The per-round live counts are the observable proving settled
+    transactions are skipped: under PCC they equal the pending count,
+    which shrinks by the committed prefix each round."""
+    wl = _wl(64, "high", seed=7)
+    store = make_store(wl.n_objects)
+    out, trace = pcc_execute(store, wl.batch, _seq_for(wl))
+    lc = trace.live_counts()
+    assert lc[0] == 64
+    assert (np.diff(lc) < 0).all()      # strictly shrinking live set
+    assert int(trace.live_txns) == lc.sum()
+    assert int(trace.live_slots) <= int(trace.rounds) * int(
+        np.asarray(wl.batch.n_ins).sum())
+
+
+def test_destm_live_counts_are_round_members():
+    wl = _wl(32, "low", seed=9)
+    store = make_store(wl.n_objects)
+    out, trace = destm_execute(store, wl.batch, _seq_for(wl),
+                               jnp.asarray(wl.lanes, jnp.int32), wl.n_lanes)
+    lc = trace.live_counts()
+    assert (lc <= wl.n_lanes).all()     # ≤ one txn per lane per round
+    assert lc.sum() == 32               # every txn executes exactly once
+    assert int(trace.live_txns) == 32
+
+
+def test_occ_wave_trips_exposed():
+    # disjoint: every wave converges in one trip
+    progs = [[(RMW, i, False, 1)] for i in range(8)]
+    batch = make_batch(progs)
+    store = make_store(8)
+    out, trace = occ_execute(store, batch, jnp.arange(8, dtype=jnp.int32))
+    assert int(trace.rounds) == 1 and int(trace.wave_trips) == 1
+    # a write-write chain: the fixpoint must iterate to the chain depth
+    progs = [[(RMW, 0, False, 1)] for _ in range(6)]
+    batch = make_batch(progs)
+    store = make_store(4)
+    out, trace = occ_execute(store, batch, jnp.arange(6, dtype=jnp.int32))
+    assert int(trace.wave_trips) > int(trace.rounds)
+
+
+def test_session_surfaces_live_counts():
+    from repro.core import PotSession
+    wl = _wl(16, "high", seed=4)
+    session = PotSession(wl.n_objects, engine="pcc", n_lanes=wl.n_lanes)
+    session.submit(wl.batch, wl.lanes.tolist())
+    session.submit(wl.batch, wl.lanes.tolist())
+    counts = session.live_counts()
+    assert len(counts) == 2
+    for lc, trace in zip(counts, session.traces):
+        assert lc.shape == (int(trace.rounds),)
+        assert lc[0] == 16
