@@ -36,7 +36,7 @@ def run_engines(wl, *, engines=("pot", "pogl", "destm", "occ")):
         session = PotSession(wl.n_objects, engine=name, n_lanes=wl.n_lanes)
         trace = session.submit(wl.batch, wl.lanes.tolist())
         out[name] = M.report_from_trace(name, trace, wl.batch, rn, wn,
-                                        n_lanes=wl.n_lanes)
+                                        n_lanes=wl.n_lanes, session=session)
     return out
 
 

@@ -1,6 +1,6 @@
-"""Engine-loop benchmark (PR 2 + PR 3) -> BENCH_engines.json.
+"""Engine-loop benchmark (PR 2 + PR 3 + PR 4) -> BENCH_engines.json.
 
-Times every engine three ways on the same workloads:
+Times every engine four ways on the same workloads:
 
 * ``scan``        — the preserved pre-refactor implementations
                     (repro.core.legacy_scan): per-round K-step commit scan
@@ -11,17 +11,32 @@ Times every engine three ways on the same workloads:
                     analysis every round (``incremental=False``);
 * ``incremental`` — the PR 3 RoundState loop: masked ``run_live`` over the
                     live transactions only, carried conflict table with
-                    delta updates.
+                    delta updates (``compact=False``);
+* ``compact``     — the PR 4 gather-compacted cascade: once the live set
+                    fits a compact-ladder rung, the read phase gathers it
+                    into a (C, L) block and executes THAT — device work
+                    scales with the live set, not K.
 
 Axes: K (batch size) × contention (low/med) × engine (pcc/occ/destm),
 plus sweeps over store slot width S, transaction length L and lane count
 at fixed K.  Each row records wall-clock txns/sec AND the read-phase
 device-work model: ``read_phase_slots`` = Σ rounds Σ live instruction
 slots (the rebuild loop pays ``rounds × Σ n_ins``; the incremental loop
-pays only the live rows — the per-round ``live_per_round`` counts prove
-settled transactions are skipped).
+pays only the live rows) and ``walked_slots`` = Σ rounds executor width
+× L — the slots the device actually walks (K·L masked, C·L compact).
 
-``--smoke`` (scripts/ci.sh --bench-smoke): tiny K, asserts the three
+Two PR 4 sections ride along:
+
+* live-fraction sweep (axis="live_fraction"): the read-phase PRIMITIVE —
+  masked ``run_live`` vs gather-compacted ``run_live_compact`` — timed at
+  live/K in {1/64, 1/8, 1/2, 1} on one batch, with results asserted
+  bitwise-equal.  The compacted executor's walked slots scale with C
+  (next_pow2 of the live count), the masked one's with K.
+* ragged-stream compile counts (axis="ragged_stream"): a 32-shape ragged
+  stream through PotSession with and without shape bucketing —
+  compile_count() must stay <= the bucket-ladder size when bucketing.
+
+``--smoke`` (scripts/ci.sh --bench-smoke): tiny K, asserts the four
 implementations' store fingerprints and commit positions are bitwise
 identical, and exercises the conflict-kernel delta path (skipped with a
 message when the TPU kernel path is unavailable, so CPU-only CI still
@@ -31,19 +46,26 @@ runs the stage).
 incremental == rebuild store fingerprints and traces across all three
 engines.
 
+``--compact-smoke`` (scripts/ci.sh --compact-smoke): asserts compact ==
+masked (incremental) == rebuild store fingerprints and traces across all
+three engines, plus run_live_compact == run_live at the primitive level.
+
 Usage:
   python benchmarks/engine_bench.py [--out BENCH_engines.json]
   python benchmarks/engine_bench.py --smoke
   python benchmarks/engine_bench.py --incremental-smoke
+  python benchmarks/engine_bench.py --compact-smoke
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import math
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -95,14 +117,18 @@ def _runners(wl: W.Workload, slot: int = 1):
             "scan": lambda: legacy_scan.pcc_execute_scan(store, wl.batch, seq),
             "rebuild": lambda: pcc_execute(store, wl.batch, seq,
                                            incremental=False),
-            "incremental": lambda: pcc_execute(store, wl.batch, seq),
+            "incremental": lambda: pcc_execute(store, wl.batch, seq,
+                                               compact=False),
+            "compact": lambda: pcc_execute(store, wl.batch, seq),
         },
         "occ": {
             "scan": lambda: legacy_scan.occ_execute_scan(
                 store, wl.batch, arrival),
             "rebuild": lambda: occ_execute(store, wl.batch, arrival,
                                            incremental=False),
-            "incremental": lambda: occ_execute(store, wl.batch, arrival),
+            "incremental": lambda: occ_execute(store, wl.batch, arrival,
+                                               compact=False),
+            "compact": lambda: occ_execute(store, wl.batch, arrival),
         },
         "destm": {
             "scan": lambda: legacy_scan.destm_execute_scan(
@@ -110,6 +136,8 @@ def _runners(wl: W.Workload, slot: int = 1):
             "rebuild": lambda: destm_execute(
                 store, wl.batch, seq, lanes, wl.n_lanes, incremental=False),
             "incremental": lambda: destm_execute(
+                store, wl.batch, seq, lanes, wl.n_lanes, compact=False),
+            "compact": lambda: destm_execute(
                 store, wl.batch, seq, lanes, wl.n_lanes),
         },
     }
@@ -124,10 +152,15 @@ def _commit_steps_model(impl: str, k: int) -> int:
 
 def _read_phase_slots(impl: str, trace, wl: W.Workload) -> int:
     """Read-phase device-work model: instruction slots actually walked by
-    the round loop's speculative executions."""
+    the round loop's speculative executions.  For the compact cascade this
+    is the WALKED width (C·L per round — it scales with the live set, not
+    K); the masked loops report the live-slot model (TPU-relevant: dead
+    lanes are inert but still walked)."""
     total = int(np.asarray(wl.batch.n_ins).sum())
     if impl == "scan":
         return int(trace.rounds) * total   # legacy run_all every round
+    if impl == "compact":
+        return int(trace.walked_slots)     # C·L per round, C from ladder
     return int(trace.live_slots)           # rebuild: rounds*total; incr: live
 
 
@@ -142,6 +175,7 @@ def _row(engine, wl, impl, secs, trace, *, slot=1, axis="k_x_contention",
         rounds=int(trace.rounds),
         commit_steps_per_round=_commit_steps_model(impl, k),
         read_phase_slots=_read_phase_slots(impl, trace, wl),
+        walked_slots=int(trace.walked_slots),
         live_txns=int(trace.live_txns),
         wave_trips=int(trace.wave_trips),
         live_per_round=[int(x) for x in lc[:64]],
@@ -187,36 +221,143 @@ def _bench_grid(wl, cont, iters, results, *, impls, slot=1, axis):
 
 def run_bench(ks, contentions, iters: int) -> dict:
     results = []
-    # primary grid: K × contention, all three implementations
+    # primary grid: K × contention, all four implementations
     for k in ks:
         for cont in contentions:
             _bench_grid(_workload(k, cont), cont, iters, results,
-                        impls=("scan", "rebuild", "incremental"),
+                        impls=("scan", "rebuild", "incremental", "compact"),
                         axis="k_x_contention")
     # axis sweeps at fixed K: slot width, txn length L, lane count
-    # (incremental-vs-rebuild only; the scan baseline is covered above)
+    # (new-pipeline impls only; the scan baseline is covered above)
     k = 256
     for slot in (4,):
         _bench_grid(_workload(k, "low"), "low", iters, results,
-                    impls=("rebuild", "incremental"), slot=slot,
+                    impls=("rebuild", "incremental", "compact"), slot=slot,
                     axis="slot_width")
     for n_rw in (8,):
         _bench_grid(_workload(k, "low", n_reads=n_rw, n_writes=n_rw),
                     "low", iters, results,
-                    impls=("rebuild", "incremental"), axis="txn_length")
+                    impls=("rebuild", "incremental", "compact"),
+                    axis="txn_length")
     for n_lanes in (2, 32):
         _bench_grid(_workload(k, "med", n_lanes=n_lanes), "med", iters,
-                    results, impls=("rebuild", "incremental"),
+                    results, impls=("rebuild", "incremental", "compact"),
                     axis="lane_count")
+    live_fraction_sweep(iters, results)
+    ragged_stream_bench(results)
     return dict(results=results)
+
+
+# ------------------------------------------------- PR 4 bench sections
+def live_fraction_sweep(iters: int, results: list, k: int = 512,
+                        fractions=(64, 8, 2, 1)) -> None:
+    """Read-phase primitive at controlled sparsity: masked ``run_live``
+    vs gather-compacted ``run_live_compact`` with live/K in
+    {1/64, 1/8, 1/2, 1}.  The compact width C is next_pow2(live count) —
+    the rung such a live set would run at.  Results asserted bitwise
+    equal; the compacted executor must beat the masked one at
+    live/K <= 1/8 (it walks C·L slots instead of K·L)."""
+    from repro.core.txn import next_pow2, run_live, run_live_compact
+
+    wl = _workload(k, "low", seed=17)
+    store = make_store(wl.n_objects)
+    cache = jax.block_until_ready(
+        jax.jit(lambda b, v: run_live(b, v, jnp.ones((k,), bool)))(
+            wl.batch, store.values))
+    masked_fn = jax.jit(run_live)
+    rng = np.random.default_rng(23)
+    rows = {}
+    for denom in fractions:
+        n_live = max(1, k // denom)
+        live = np.zeros(k, bool)
+        live[rng.choice(k, n_live, replace=False)] = True
+        live = jnp.asarray(live)
+        width = next_pow2(n_live)
+        compact_fn = jax.jit(functools.partial(run_live_compact,
+                                               width=width))
+        t_masked = timeit(lambda: masked_fn(wl.batch, store.values, live,
+                                            cache), warmup=2, iters=iters)
+        t_compact = timeit(lambda: compact_fn(wl.batch, store.values, live,
+                                              cache), warmup=2, iters=iters)
+        ref = masked_fn(wl.batch, store.values, live, cache)
+        got = compact_fn(wl.batch, store.values, live, cache)[0]
+        for f in ("raddrs", "rn", "waddrs", "wvals", "wn"):
+            assert np.array_equal(np.asarray(getattr(ref, f)),
+                                  np.asarray(getattr(got, f))), (
+                f"live-fraction sweep: run_live_compact diverged on {f} "
+                f"at live/K=1/{denom}")
+        length = wl.batch.max_ins
+        for impl, secs, walked in (("masked", t_masked, k * length),
+                                   ("compact", t_compact, width * length)):
+            rows[(impl, denom)] = secs
+            results.append(dict(
+                engine="run_live", k=k, impl=impl, axis="live_fraction",
+                L=length, slot=1, n_lanes=wl.n_lanes,
+                contention="low", live_fraction=f"1/{denom}",
+                n_live=n_live, compact_width=(width if impl == "compact"
+                                              else k),
+                seconds=round(secs, 6),
+                txns_per_sec=round(k / secs, 1),
+                read_phase_slots=walked, walked_slots=walked))
+            print(f"run_live K={k} live=1/{denom:<3d} {impl:8s} "
+                  f"{secs * 1e6:9.1f} us  walked_slots={walked}")
+    for denom in fractions:
+        if denom >= 8:
+            assert rows[("compact", denom)] < rows[("masked", denom)], (
+                f"compacted read phase slower than masked at live/K=1/"
+                f"{denom}: {rows[('compact', denom)]:.6f}s vs "
+                f"{rows[('masked', denom)]:.6f}s")
+
+
+def ragged_stream_bench(results: list, n_shapes: int = 32) -> None:
+    """Streaming compile-count benchmark: one N-shape ragged stream per
+    engine through PotSession, bucketed vs exact shapes.  Bucketed
+    streaming must compile at most ladder-size steps; outcomes are
+    asserted bitwise identical."""
+    from repro.core import PotSession
+
+    rng = np.random.default_rng(31)
+    batches, lanes = [], []
+    for i in range(n_shapes):
+        kk = int(rng.integers(1, 129))
+        wl = W.counters(n_txns=kk, n_objects=256, n_reads=2, n_writes=2,
+                        n_lanes=min(4, kk), skew=0.5, seed=1000 + i)
+        batches.append(wl.batch)
+        lanes.append(wl.lanes.tolist())
+    for engine in ("pcc", "occ", "destm"):
+        stats = {}
+        for mode, bucket in (("bucketed", True), ("exact", False)):
+            t0 = time.perf_counter()
+            s = PotSession(256, engine=engine, n_lanes=4, bucket=bucket)
+            s.run_stream(batches, lanes)
+            jax.block_until_ready(s.store.values)
+            secs = time.perf_counter() - t0
+            stats[mode] = (s, secs)
+            results.append(dict(
+                engine=engine, impl=mode, axis="ragged_stream",
+                n_shapes=n_shapes,
+                distinct_shapes=len({(b.n_txns, b.max_ins)
+                                     for b in batches}),
+                compile_count=s.compile_count(),
+                bucket_counts={str(kk): v
+                               for kk, v in sorted(s.bucket_counts().items())},
+                seconds=round(secs, 6)))
+            print(f"{engine:6s} ragged x{n_shapes} {mode:9s} "
+                  f"compiles={s.compile_count():<3d} {secs:8.2f} s")
+        sb, se = stats["bucketed"][0], stats["exact"][0]
+        assert sb.fingerprint() == se.fingerprint(), engine
+        assert sb.replay_log() == se.replay_log(), engine
+        # bucket ladder over K in [1, 128] has 8 pow2 rungs — the compile
+        # count must stay within it no matter how ragged the stream is
+        assert sb.compile_count() <= 8, (engine, sb.compile_count())
 
 
 def summarize(results) -> dict:
     speedups = {}
     for row in results:
-        if row["impl"] != "incremental":
+        if row["impl"] != "compact" or row["axis"] == "live_fraction":
             continue
-        for base in ("scan", "rebuild"):
+        for base in ("scan", "rebuild", "incremental"):
             old = next(
                 (r for r in results
                  if r["impl"] == base and r["engine"] == row["engine"]
@@ -231,7 +372,7 @@ def summarize(results) -> dict:
                 # sweep rows: disambiguate by the swept coordinate
                 key += (f'/{row["axis"]}/L{row["L"]}S{row["slot"]}'
                         f'lanes{row["n_lanes"]}')
-            key += f"/{base}_to_incremental"
+            key += f"/{base}_to_compact"
             speedups[key] = dict(
                 time=round(old["seconds"] / row["seconds"], 2),
                 read_phase_slots=round(
@@ -280,7 +421,7 @@ def _kernel_smoke() -> str:
 
 
 def run_smoke() -> None:
-    """Equivalence gate: every engine, all three implementations, must
+    """Equivalence gate: every engine, all four implementations, must
     agree bitwise."""
     for k in (2, 8):
         for cont in ("low", "med"):
@@ -288,11 +429,12 @@ def run_smoke() -> None:
             _, runners = _runners(wl)
             for engine, impls in runners.items():
                 outs = {name: fn() for name, fn in impls.items()}
-                for name in ("rebuild", "incremental"):
+                for name in ("rebuild", "incremental", "compact"):
                     _assert_equal(engine, k, cont, *outs["scan"],
                                   *outs[name], pair=("scan", name))
-    print("bench-smoke OK: scan, rebuild and incremental agree bitwise "
-          "(engines: pcc, occ, destm; K in {2, 8}; low/med contention)")
+    print("bench-smoke OK: scan, rebuild, incremental and compact agree "
+          "bitwise (engines: pcc, occ, destm; K in {2, 8}; low/med "
+          "contention)")
     print(_kernel_smoke())
 
 
@@ -314,20 +456,83 @@ def run_incremental_smoke() -> None:
           "(engines: pcc, occ, destm; K in {2, 8, 64}; low/med contention)")
 
 
+def run_compact_smoke() -> None:
+    """CI gate (scripts/ci.sh --compact-smoke): the gather-compacted
+    cascade == the masked incremental loop == the from-scratch rebuild,
+    on store fingerprints and traces, across all engines — and the
+    compact read-phase primitive == the masked one on partial live
+    sets (including sizes 0 and 1)."""
+    from repro.core.txn import next_pow2, run_all, run_live, run_live_compact
+
+    for k in (2, 8, 64):
+        for cont in ("low", "med"):
+            wl = _workload(k, cont, seed=7 * k + 5)
+            _, runners = _runners(wl)
+            for engine, impls in runners.items():
+                out_reb, t_reb = impls["rebuild"]()
+                out_inc, t_inc = impls["incremental"]()
+                out_cpt, t_cpt = impls["compact"]()
+                _assert_equal(engine, k, cont, out_inc, t_inc,
+                              out_cpt, t_cpt, pair=("incremental",
+                                                    "compact"))
+                _assert_equal(engine, k, cont, out_reb, t_reb,
+                              out_cpt, t_cpt, pair=("rebuild", "compact"))
+                assert int(t_cpt.walked_slots) <= int(t_inc.walked_slots), (
+                    engine, k, cont)
+    # primitive: gather-execute-scatter == masked, sparse live sets
+    wl = _workload(64, "low", seed=2)
+    store = make_store(wl.n_objects)
+    cache = run_all(wl.batch, store.values)
+    rng = np.random.default_rng(9)
+    for n_live in (0, 1, 5, 64):
+        live = np.zeros(64, bool)
+        live[rng.choice(64, n_live, replace=False)] = True
+        live = jnp.asarray(live)
+        ref = run_live(wl.batch, store.values, live, cache)
+        got = run_live_compact(wl.batch, store.values, live, cache,
+                               max(1, next_pow2(n_live)))[0]
+        for f in ("raddrs", "rn", "waddrs", "wvals", "wn"):
+            assert np.array_equal(np.asarray(getattr(ref, f)),
+                                  np.asarray(getattr(got, f))), (n_live, f)
+    print("compact-smoke OK: compact == masked == rebuild (engines: pcc, "
+          "occ, destm; K in {2, 8, 64}; low/med contention) and "
+          "run_live_compact == run_live (live in {0, 1, 5, 64})")
+
+
 def run() -> None:
-    """benchmarks/run.py entry point: one incremental-vs-rebuild row per
-    engine at K=256 low contention (CSV: name,us_per_call,derived)."""
+    """benchmarks/run.py entry point: one incremental-vs-rebuild-vs-
+    compact row per engine at K=256 low contention, plus a ragged-stream
+    compile-count row (CSV: name,us_per_call,derived)."""
     from benchmarks.common import emit
+    from repro.core import PotSession
     wl = _workload(256, "low")
     _, runners = _runners(wl)
     for engine, impls in runners.items():
         t_reb = timeit(impls["rebuild"], warmup=1, iters=3)
         t_inc = timeit(impls["incremental"], warmup=1, iters=3)
-        _, trace = impls["incremental"]()
-        emit(f"engine_bench_{engine}_k256_low_incremental", t_inc * 1e6,
-             f"rebuild_over_incremental={t_reb / t_inc:.2f}x;"
+        t_cpt = timeit(impls["compact"], warmup=1, iters=3)
+        _, trace = impls["compact"]()
+        emit(f"engine_bench_{engine}_k256_low_compact", t_cpt * 1e6,
+             f"rebuild_over_compact={t_reb / t_cpt:.2f}x;"
+             f"incremental_over_compact={t_inc / t_cpt:.2f}x;"
              f"live_txns={int(trace.live_txns)};"
+             f"walked_slots={int(trace.walked_slots)};"
              f"rounds={int(trace.rounds)}")
+    # ragged-stream compile counts: 8 shapes is enough for a CSV row
+    rng = np.random.default_rng(3)
+    batches = []
+    for i in range(8):
+        kk = int(rng.integers(1, 65))
+        batches.append(W.counters(n_txns=kk, n_objects=128, n_lanes=1,
+                                  skew=0.5, seed=i).batch)
+    for mode, bucket in (("bucketed", True), ("exact", False)):
+        t0 = time.perf_counter()
+        s = PotSession(128, engine="pcc", bucket=bucket)
+        s.run_stream(batches)
+        jax.block_until_ready(s.store.values)
+        emit(f"engine_bench_ragged8_{mode}",
+             (time.perf_counter() - t0) * 1e6,
+             f"compiles={s.compile_count()}")
 
 
 def main() -> None:
@@ -336,6 +541,9 @@ def main() -> None:
                     help="tiny K, equivalence assertions only (CI stage)")
     ap.add_argument("--incremental-smoke", action="store_true",
                     help="assert incremental == rebuild across engines")
+    ap.add_argument("--compact-smoke", action="store_true",
+                    help="assert compact == masked == rebuild across "
+                         "engines (+ primitive equality)")
     ap.add_argument(
         "--out",
         default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -349,6 +557,9 @@ def main() -> None:
     if args.incremental_smoke:
         run_incremental_smoke()
         return
+    if args.compact_smoke:
+        run_compact_smoke()
+        return
 
     ks = (64, 256, 1024)
     bench = run_bench(ks, ("low", "med"), args.iters)
@@ -359,18 +570,24 @@ def main() -> None:
              "batched pipeline with a from-scratch round (full run_all + "
              "rebuilt conflict analysis); incremental = PR3 RoundState "
              "loop (masked run_live over live txns, carried conflict "
-             "table with delta updates).  read_phase_slots is the "
-             "read-phase device-work model (instruction slots walked by "
-             "speculative execution); live_per_round proves settled txns "
-             "are skipped.  On CPU the masked executor still walks the "
-             "full (K, L) grid (static shapes), so the wall-clock win is "
-             "bounded; the slot model is the TPU-relevant metric.",
+             "table with delta updates, compact=False); compact = PR4 "
+             "gather-compacted cascade (the live tail executes at ladder "
+             "width C, device work scales with the live set).  "
+             "read_phase_slots is the read-phase device-work model; "
+             "walked_slots the slots the executor actually walks (K*L "
+             "masked, C*L compact); live_per_round proves settled txns "
+             "are skipped.  The masked executor walks the full (K, L) "
+             "grid on every backend (static shapes) — the compact "
+             "cascade is what turns the sparse-tail slot win into "
+             "wall-clock (see axis=live_fraction for the primitive).  "
+             "axis=ragged_stream: PotSession shape bucketing, compile "
+             "counts bucketed vs exact.",
         commit_steps_model="scan: K sequential device steps per round; "
                            "rebuild/incremental: ceil(log2 K) + 3 batched "
                            "stages (PCC/DeSTM; OCC: conflict-chain depth, "
                            "see wave_trips)",
     )
-    bench["speedup_to_incremental"] = summarize(bench["results"])
+    bench["speedup_to_compact"] = summarize(bench["results"])
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"wrote {args.out}")

@@ -1,10 +1,22 @@
 """Serve a small model with batched requests under deterministic
 commits (the paper's replica-fault-tolerance use case, §1).
 
-Two replica Sessions receive the same requests in DIFFERENT submission
-interleavings; because slot commits are preordered (sequencer over slots,
-ordered paged commits with version stamps), both replicas emit identical
-token streams and identical page-version state.
+Two demos:
+
+1. **Replicated LM serving** — two replica Sessions receive the same
+   requests in DIFFERENT submission interleavings; because slot commits
+   are preordered (sequencer over slots, ordered paged commits with
+   version stamps), both replicas emit identical token streams and
+   identical page-version state.
+
+2. **Ragged transactional streaming** (PR 4) — a serving frontend never
+   sees neat fixed-size batches: every tick hands the engine however
+   many transactions arrived.  ``PotSession`` pads each ragged batch up
+   to a power-of-two shape bucket with vacant NOP rows (which provably
+   never commit), so the whole stream runs on a handful of compiled
+   steps instead of one compile per distinct shape — with a bitwise
+   identical store, and replica determinism preserved across different
+   raggedness.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
@@ -13,6 +25,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import PotSession
+from repro.core import workloads as W
 from repro.models import lm
 from repro.serve.session import Session
 
@@ -35,3 +49,33 @@ identical = (np.array_equal(streams[0][0], streams[1][0])
              and streams[0][1] == streams[1][1])
 print(f"replicas bitwise identical: {identical}")
 assert identical
+
+# ---------------------------------------------------------------------------
+# Ragged transactional streaming: bucketed submit, no per-shape recompiles
+# ---------------------------------------------------------------------------
+print("\nragged streaming (PR 4): 16 ticks of 1..48 txns each")
+rng = np.random.default_rng(7)
+ticks = []
+for i in range(16):
+    k = int(rng.integers(1, 49))                 # whatever arrived this tick
+    wl = W.counters(n_txns=k, n_objects=256, n_reads=2, n_writes=2,
+                    n_lanes=4, skew=0.6, seed=50 + i)
+    ticks.append((wl.batch, wl.lanes.tolist()))
+
+shapes = sorted({(b.n_txns, b.max_ins) for b, _ in ticks})
+sessions = {}
+for mode, bucket in (("bucketed", True), ("exact-shape", False)):
+    sess = PotSession(256, engine="pcc", n_lanes=4, bucket=bucket)
+    for batch, lanes in ticks:
+        sess.submit(batch, lanes)
+    sessions[mode] = sess
+    print(f"  {mode:12s}: {sess.compile_count():2d} compiled steps for "
+          f"{len(shapes)} distinct shapes "
+          f"(buckets: {sorted(sess.bucket_counts())})")
+
+assert sessions["bucketed"].fingerprint() == \
+    sessions["exact-shape"].fingerprint()
+assert sessions["bucketed"].replay_log() == \
+    sessions["exact-shape"].replay_log()
+assert sessions["bucketed"].compile_count() < len(shapes)
+print("  bucketed store + commit log bitwise identical to exact-shape run")

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
 # the test suite: it executes every engine through the preserved legacy
@@ -13,6 +13,12 @@
 # incremental == rebuild store fingerprints and traces across all three
 # engines (the RoundState equivalence gate).
 #
+# --compact-smoke runs benchmarks/engine_bench.py --compact-smoke:
+# the PR4 gather-compacted cascade == the masked incremental loop ==
+# rebuild, on store fingerprints and traces, across all three engines,
+# plus run_live_compact == run_live at the primitive level (the
+# compacted-execution equivalence gate).
+#
 # Stages do NOT short-circuit each other: every requested stage runs and
 # the script exits non-zero if ANY stage failed (the last failing stage's
 # exit code is propagated).
@@ -22,11 +28,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
 INCREMENTAL_SMOKE=0
+COMPACT_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
   case "$arg" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --incremental-smoke) INCREMENTAL_SMOKE=1 ;;
+    --compact-smoke) COMPACT_SMOKE=1 ;;
     *) PYTEST_ARGS+=("$arg") ;;
   esac
 done
@@ -52,6 +60,10 @@ fi
 
 if [[ "$INCREMENTAL_SMOKE" == "1" ]]; then
   run_stage incremental-smoke python benchmarks/engine_bench.py --incremental-smoke
+fi
+
+if [[ "$COMPACT_SMOKE" == "1" ]]; then
+  run_stage compact-smoke python benchmarks/engine_bench.py --compact-smoke
 fi
 
 exit "$FAIL"

@@ -10,6 +10,10 @@ session-oriented:
         buffers); ``submit(batch, lanes)`` / ``run_stream(batches)``
         carry ``gv`` and the store image across batches and record the
         commit order for ``replay_log()`` / ``replay_sequencer()``.
+        Ragged batch shapes are padded to power-of-two buckets with
+        vacant NOP rows (which provably never commit), so a ragged
+        stream compiles per bucket, not per shape
+        (``compile_count()`` / ``bucket_counts()``).
     get_engine / ENGINES / Engine / EngineDef — engine registry:
         "pcc" (Pot Concurrency Control), "pogl", "destm", "occ"
         (and "pot" as an alias for "pcc"), every one returning the
@@ -52,7 +56,8 @@ from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
 from repro.core.session import PotSession
 from repro.core.tstore import TStore, fingerprint, make_store
 from repro.core.txn import (NOP, READ, RMW, WRITE, TxnBatch, TxnResult,
-                            make_batch, run_all, run_live, run_txn)
+                            make_batch, next_pow2, pad_batch, run_all,
+                            run_live, run_live_compact, run_txn)
 
 __all__ = [
     # unified engine API
@@ -61,7 +66,8 @@ __all__ = [
     "MODE_UNSET", "MODE_FAST", "MODE_PREFIX", "MODE_SPEC",
     # store + transactions
     "TStore", "make_store", "fingerprint",
-    "TxnBatch", "TxnResult", "make_batch", "run_all", "run_live", "run_txn",
+    "TxnBatch", "TxnResult", "make_batch", "run_all", "run_live",
+    "run_live_compact", "run_txn", "pad_batch", "next_pow2",
     "NOP", "READ", "WRITE", "RMW",
     # sequencers
     "RoundRobinSequencer", "ReplaySequencer", "ExplicitSequencer",

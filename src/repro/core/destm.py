@@ -61,20 +61,29 @@ DestmTrace = ExecTrace
 def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                    lanes: jax.Array, n_lanes: int,
                    max_rounds: int | None = None,
-                   incremental: bool = True) -> tuple[TStore, ExecTrace]:
+                   incremental: bool = True,
+                   compact: bool = True) -> tuple[TStore, ExecTrace]:
     """seq: (K,) 1-based sequence numbers; lanes: (K,) lane of each txn.
 
     Token order within a round = sequence order restricted to the round's
     transactions (with the paper's shared round-robin sequencer this is the
     lane order, matching DeSTM's token passing).
 
-    ``incremental``: execute only the round's ≤ n_lanes members through
-    the masked executor (``run_live`` via ``protocol.RoundState``) —
-    every other transaction's row is carried, and a row is only ever
-    consumed in the round its transaction is a member of, so the loop is
+    ``incremental``: execute only the round's ≤ n_lanes members — every
+    other transaction's row is carried, and a row is only ever consumed
+    in the round its transaction is a member of, so the loop is
     bit-identical to the full per-round ``run_all`` (False, the PR 2
     behavior).  DeSTM carries no conflict table: its conflict questions
     live on the compacted (n_lanes, L) block.
+
+    ``compact``: the round's members are the degenerate *always-compact*
+    case of the shared gather-compacted read phase
+    (``protocol.refresh_round_state_gathered`` with the member rows in
+    token order): the executor walks (n_lanes, L), never (K, L).  False
+    keeps the masked (K, L) executor (the PR 3 behavior) — decisions are
+    bit-identical either way.  Rows with ``n_ins == 0`` are *vacant*
+    (bucket padding): never round members, never committed, no ``gv``
+    advance (their sequence numbers must sort after every real row's).
     """
     k = batch.n_txns
     n_obj = store.n_objects
@@ -82,6 +91,8 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     rank = rank_from_order(order)
     gv0 = store.gv
     lane_slot = jnp.arange(n_lanes)
+    real = batch.n_ins > 0     # vacant rows (bucket padding) never commit
+    n_real = real.sum(dtype=jnp.int32)
 
     def round_body(state):
         rs, done, rnd, tr = state
@@ -100,14 +111,24 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         live = sel_pos < k
         sel_txn = order[jnp.clip(sel_pos, 0, k - 1)]  # txn id per member
 
-        # ---- masked speculative execution: only the round's members run
-        live_t = sel_t if incremental else jnp.ones((k,), bool)
-        rs = protocol.refresh_round_state(rs, batch, live_t)
-        res = rs.res
+        # ---- speculative execution: only the round's members run.  The
+        # compact path executes exactly the (n_lanes, L) member block in
+        # token order through the shared gathered read phase; the result
+        # rows come back compact, no post-hoc (K, L) gathers needed.
+        if incremental and compact:
+            live_t = sel_t
+            rs, cres = protocol.refresh_round_state_gathered(
+                rs, batch, sel_txn, live)
+            ra_c, rn_c = cres.raddrs, cres.rn
+            wa_c, wv_c, wn_c = cres.waddrs, cres.wvals, cres.wn
+        else:
+            live_t = sel_t if incremental else jnp.ones((k,), bool)
+            rs = protocol.refresh_round_state(rs, batch, live_t)
+            res = rs.res
+            ra_c, rn_c = res.raddrs[sel_txn], res.rn[sel_txn]
+            wa_c, wv_c, wn_c = (res.waddrs[sel_txn], res.wvals[sel_txn],
+                                res.wn[sel_txn])
         values, versions = rs.values, rs.versions
-        ra_c, rn_c = res.raddrs[sel_txn], res.rn[sel_txn]
-        wa_c, wv_c, wn_c = (res.waddrs[sel_txn], res.wvals[sel_txn],
-                            res.wn[sel_txn])
         sn_c = gv0 + 1 + sel_pos                      # version stamps
         compact_batch = jax.tree.map(lambda a: a[sel_txn], batch)
         compact_res = TxnResult(raddrs=ra_c, rn=rn_c, waddrs=wa_c,
@@ -217,29 +238,38 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                                     track_conflict=False)
     rs, done, rnd, tr = jax.lax.while_loop(
         cond, round_body,
-        (rs0, jnp.zeros((k,), bool), jnp.zeros((), jnp.int32), tr0))
+        (rs0, ~real, jnp.zeros((), jnp.int32), tr0))
     values, versions = rs.values, rs.versions
 
     # DeSTM's serialization is round-major: rounds commit in order, and
     # within a round the token order (= sequence order restricted to the
     # round's members) decides.  With uneven lane loads this is NOT the
     # plain sequence order, so commit_pos must rank (round, token) pairs.
+    # Excluded rows — vacant padding, plus reals a max_rounds cap left
+    # uncommitted — all carry commit_round == -1 and therefore sort
+    # before every committed row; slide the committed positions down
+    # past them and stamp the excluded -1.
+    committed = tr["commit_round"] >= 0
+    n_excluded = (~committed).sum(dtype=jnp.int32)
     commit_pos = seq_rank(tr["commit_round"] * (k + 1) + rank)
+    commit_pos = jnp.where(committed, commit_pos - n_excluded, -1)
     trace = make_trace(
         k,
         commit_round=tr["commit_round"], retries=tr["retries"],
         rounds=rnd, exec_ops=tr["exec_ops"],
         barrier_ops=tr["barrier_ops"],
         live_txns=rs.live_txns, live_slots=rs.live_slots,
+        walked_slots=rs.walked_slots,
         live_per_round=tr["live_per_round"],
         # a txn executes only in its commit round
         first_round=tr["commit_round"], commit_pos=commit_pos)
-    return TStore(values=values, versions=versions, gv=store.gv + k), trace
+    return TStore(values=values, versions=versions,
+                  gv=store.gv + n_real), trace
 
 
 destm_execute = jax.jit(
     _destm_execute,
-    static_argnames=("n_lanes", "max_rounds", "incremental"))
+    static_argnames=("n_lanes", "max_rounds", "incremental", "compact"))
 
 
 def _destm_raw(store, batch, seq, lanes, n_lanes):

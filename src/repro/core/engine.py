@@ -71,6 +71,11 @@ class ExecTrace:
     wave_trips: jax.Array    # ()   int32 — Σ wave_commit fixpoint trips (OCC)
     live_txns: jax.Array     # ()   int32 — Σ rounds re-executed (live) txns
     live_slots: jax.Array    # ()   int32 — Σ rounds live instruction slots
+    walked_slots: jax.Array  # ()   int32 — Σ rounds executor width × L: the
+    #   instruction slots the read phase actually WALKS on device (static
+    #   shapes) — K·L per masked round, C·L per compact round.  The
+    #   observable behind the gather-compacted path: live_slots is the
+    #   useful work, walked_slots the device work paying for it.
     live_per_round: jax.Array  # (R,) int32 — live count per round, -1 pad
     #   (R = the engine's static round limit; entries past `rounds` stay
     #    -1.  Engines predating the RoundState loop leave it empty.)
@@ -111,6 +116,7 @@ def make_trace(k: int, **overrides) -> ExecTrace:
         wave_trips=jnp.zeros((), jnp.int32),
         live_txns=jnp.zeros((), jnp.int32),
         live_slots=jnp.zeros((), jnp.int32),
+        walked_slots=jnp.zeros((), jnp.int32),
         live_per_round=jnp.zeros((0,), jnp.int32),
     )
     fields.update(overrides)

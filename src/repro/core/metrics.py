@@ -45,16 +45,24 @@ class EngineReport:
     #                          contention cost of the commit decision
     live_txns: int = 0       # Σ per-round re-executed (live) txns — the
     #                          incremental loop's actual read-phase work
+    walked_slots: int = 0    # Σ per-round executor width × L — device slots
+    #                          the read phase walked (C·L per compact
+    #                          round vs K·L masked; PR 4's observable)
+    compile_count: int = 0   # distinct compiled step shapes of the session
+    #                          behind this trace (bucketed streaming: <=
+    #                          ladder size; 0 when no session was given)
 
     def row(self) -> str:
         return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
                 f"{self.critical_path:.0f},{self.total_wait_rounds},"
                 f"{self.retries},{self.fast_commits},{self.prefix_commits},"
-                f"{self.throughput:.5f},{self.wave_trips},{self.live_txns}")
+                f"{self.throughput:.5f},{self.wave_trips},{self.live_txns},"
+                f"{self.walked_slots},{self.compile_count}")
 
 
 HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
-          "fast_commits,prefix_commits,throughput,wave_trips,live_txns")
+          "fast_commits,prefix_commits,throughput,wave_trips,live_txns,"
+          "walked_slots,compile_count")
 
 
 def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
@@ -66,24 +74,34 @@ def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
 
 
 def report_from_trace(name: str, trace, batch, res_rn, res_wn,
-                      n_lanes: int = 1) -> EngineReport:
+                      n_lanes: int = 1, session=None) -> EngineReport:
     """Build an EngineReport from the canonical ExecTrace of any engine.
 
     ``name`` picks the engine's cost structure ("pot"/"pcc", "pogl",
     "destm", "occ") — the *schema* is shared, the cost model is not:
     e.g. only Pot has an uninstrumented fast path, only DeSTM pays round
     barriers.
+
+    ``session`` optionally attaches the PotSession the trace came from,
+    filling the CSV's compile-cache columns (``compile_count`` — the
+    shape-bucketing observable; see PotSession.compile_count()).
     """
     kind = {"pot": "pot", "pcc": "pot"}.get(name, name)
     if kind == "pot":
-        return _report_pot(trace, batch, res_rn, res_wn)
-    if kind == "pogl":
-        return _report_pogl(batch, res_rn, res_wn)
-    if kind == "destm":
-        return _report_destm(trace, batch, res_rn, res_wn, n_lanes)
-    if kind == "occ":
-        return _report_occ(trace, batch, res_rn, res_wn)
-    raise KeyError(f"no report model for engine {name!r}")
+        rep = _report_pot(trace, batch, res_rn, res_wn)
+    elif kind == "pogl":
+        rep = _report_pogl(batch, res_rn, res_wn)
+    elif kind == "destm":
+        rep = _report_destm(trace, batch, res_rn, res_wn, n_lanes)
+    elif kind == "occ":
+        rep = _report_occ(trace, batch, res_rn, res_wn)
+    else:
+        raise KeyError(f"no report model for engine {name!r}")
+    if trace is not None:
+        rep.walked_slots = int(trace.walked_slots)
+    if session is not None:
+        rep.compile_count = session.compile_count()
+    return rep
 
 
 def _report_pot(trace, batch, res_rn, res_wn) -> EngineReport:

@@ -38,57 +38,86 @@ OccTrace = ExecTrace
 
 def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
                  max_waves: int | None = None,
-                 incremental: bool = True) -> tuple[TStore, ExecTrace]:
+                 incremental: bool = True,
+                 compact: bool = True) -> tuple[TStore, ExecTrace]:
     """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th.
 
     ``incremental``: re-execute only the not-yet-committed transactions
     each wave (masked ``run_live`` + carried conflict table through
     ``protocol.RoundState``); False rebuilds per wave (PR 2 behavior).
     Decision-identical — the wave rule only consumes pending rows.
+
+    ``compact``: cascade the wave loop over ``protocol.compact_ladder``
+    widths — the surviving conflict tail of a contended batch executes
+    gather-compacted at (C, L) once it fits a rung, instead of a masked
+    pass over the full (K, L) grid.  Decision-identical to the masked
+    loop.  Rows with ``n_ins == 0`` are *vacant* (bucket padding): never
+    pending, never committed, no ``gv`` advance (their arrival positions
+    must sort after every real row's).
     """
     k = batch.n_txns
     n_obj = store.n_objects
     # arrival rank of each txn: one argsort's inverse, computed once
     rank = rank_from_order(arrival)
+    real = batch.n_ins > 0     # vacant rows (bucket padding) never commit
 
-    def wave_body(state):
-        rs, done, n_comm, wave, tr = state
+    def wave_body_at(width: int):
+        full = width >= k
 
-        # --- masked read phase + carried conflict table ------------------
-        pending_t = ~done
-        live = pending_t if incremental else jnp.ones((k,), bool)
-        rs = protocol.refresh_round_state(rs, batch, live)
-        res = rs.res
+        def wave_body(state):
+            rs, done, n_comm, wave, tr = state
 
-        # --- greedy wave fixpoint (trip count = conflict-chain depth) ----
-        committing_t, trips = protocol.wave_commit(
-            res, rs.conflict, pending_t, rank, n_obj)
+            # --- read phase (masked at the full rung, gather-compacted
+            # below it) + carried conflict table --------------------------
+            pending_t = ~done
+            live = pending_t if incremental else jnp.ones((k,), bool)
+            if full:
+                rs = protocol.refresh_round_state(rs, batch, live)
+            else:
+                rs, _, _, _ = protocol.refresh_round_state_compact(
+                    rs, batch, live, width)
+            res = rs.res
 
-        # commit position = running count in arrival order; the cumsum
-        # lives in position space, gathered back through each txn's rank
-        commit_idx_t = n_comm + jnp.cumsum(committing_t[arrival])[rank] - 1
-        values, versions = protocol.fused_write_back(
-            rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
-            committing_t, rank, commit_idx_t + 1)
+            # --- greedy wave fixpoint (trip count = conflict-chain depth)
+            committing_t, trips = protocol.wave_commit(
+                res, rs.conflict, pending_t, rank, n_obj)
 
-        commit_pos = jnp.maximum(tr["commit_pos"],
-                                 jnp.where(committing_t, commit_idx_t, -1))
-        retries = tr["retries"] + (pending_t & ~committing_t)
-        exec_ops = tr["exec_ops"] + jnp.where(
-            pending_t, batch.n_ins, 0).sum(dtype=jnp.int32)
-        done = done | committing_t
-        tr = dict(tr, commit_pos=commit_pos, retries=retries,
-                  exec_ops=exec_ops,
-                  wave_trips=tr["wave_trips"] + trips,
-                  live_per_round=tr["live_per_round"].at[wave].set(
-                      live.sum(dtype=jnp.int32)))
-        rs = protocol.commit_round_state(rs, values, versions)
-        return (rs, done,
-                n_comm + committing_t.sum(dtype=jnp.int32), wave + 1, tr)
+            # commit position = running count in arrival order; the cumsum
+            # lives in position space, gathered back through each txn's
+            # rank
+            commit_idx_t = n_comm + jnp.cumsum(committing_t[arrival])[rank] - 1
+            values, versions = protocol.fused_write_back(
+                rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
+                committing_t, rank, commit_idx_t + 1)
 
-    def cond(state):
-        _, done, _, wave, _ = state
-        return (~done.all()) & (wave < limit)
+            commit_pos = jnp.maximum(
+                tr["commit_pos"],
+                jnp.where(committing_t, commit_idx_t, -1))
+            retries = tr["retries"] + (pending_t & ~committing_t)
+            exec_ops = tr["exec_ops"] + jnp.where(
+                pending_t, batch.n_ins, 0).sum(dtype=jnp.int32)
+            done = done | committing_t
+            tr = dict(tr, commit_pos=commit_pos, retries=retries,
+                      exec_ops=exec_ops,
+                      wave_trips=tr["wave_trips"] + trips,
+                      live_per_round=tr["live_per_round"].at[wave].set(
+                          live.sum(dtype=jnp.int32)))
+            rs = protocol.commit_round_state(rs, values, versions)
+            return (rs, done,
+                    n_comm + committing_t.sum(dtype=jnp.int32), wave + 1, tr)
+
+        return wave_body
+
+    def cond_at(next_width: int):
+        def cond(state):
+            _, done, _, wave, _ = state
+            go = (~done.all()) & (wave < limit)
+            if next_width:
+                # hand over to the narrower rung once the pending set fits
+                go = go & ((~done).sum(dtype=jnp.int32) > next_width)
+            return go
+
+        return cond
 
     limit = max_waves if max_waves is not None else k + 1
     tr0 = dict(commit_pos=jnp.full((k,), -1, jnp.int32),
@@ -97,10 +126,13 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
                wave_trips=jnp.zeros((), jnp.int32),
                live_per_round=jnp.full((limit,), -1, jnp.int32))
     rs0 = protocol.init_round_state(batch, store.values, store.versions)
-    rs, done, n_comm, wave, tr = jax.lax.while_loop(
-        cond, wave_body,
-        (rs0, jnp.zeros((k,), bool),
-         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), tr0))
+    ladder = (protocol.compact_ladder(k) if (incremental and compact)
+              else [k])
+    state = (rs0, ~real, jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32), tr0)
+    state = protocol.run_compact_cascade(ladder, state, wave_body_at,
+                                         cond_at)
+    rs, done, n_comm, wave, tr = state
 
     trace = make_trace(
         k,
@@ -108,15 +140,16 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
         rounds=wave, exec_ops=tr["exec_ops"],
         wave_trips=tr["wave_trips"],
         live_txns=rs.live_txns, live_slots=rs.live_slots,
+        walked_slots=rs.walked_slots,
         live_per_round=tr["live_per_round"],
-        # a txn that retried r waves committed in wave r
-        commit_round=tr["retries"])
+        # a txn that retried r waves committed in wave r (vacant: none)
+        commit_round=jnp.where(real, tr["retries"], -1))
     return TStore(values=rs.values, versions=rs.versions,
                   gv=store.gv + n_comm), trace
 
 
 occ_execute = jax.jit(
-    _occ_execute, static_argnames=("max_waves", "incremental"))
+    _occ_execute, static_argnames=("max_waves", "incremental", "compact"))
 
 
 def _occ_raw(store, batch, seq, lanes, n_lanes):

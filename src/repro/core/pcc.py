@@ -77,12 +77,17 @@ PccTrace = ExecTrace
 def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                  max_rounds: int | None = None,
                  live_promotion: bool = True,
-                 incremental: bool = True) -> tuple[TStore, ExecTrace]:
+                 incremental: bool = True,
+                 compact: bool = True) -> tuple[TStore, ExecTrace]:
     """Execute a batch of preordered transactions under PCC.
 
     Args:
       store: committed TStore.
-      batch: K transactions (dynamic read/write sets).
+      batch: K transactions (dynamic read/write sets).  Rows with
+             ``n_ins == 0`` are *vacant* (shape-bucket padding from
+             ``PotSession.submit``): never pending, never committed, no
+             ``gv`` advance, ``commit_pos == -1``.  Their sequence
+             numbers must sort after every real row's.
       seq:   (K,) int32 — 1-based sequence numbers from the sequencer
              (a permutation of 1..K).
       live_promotion: paper §2.2.3 — after the prefix commits, the next
@@ -98,8 +103,19 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
              incremental-smoke equivalence gate).  Decision-identical:
              committed transactions' rows are never consumed by the
              prefix decision, so both paths commit bit-identically.
+      compact: run the round loop as a cascade over
+             ``protocol.compact_ladder(K)`` widths — once the pending
+             suffix fits a narrower rung, the read phase gathers it into
+             a (C, L) block and executes THAT
+             (``protocol.refresh_round_state_compact``), so the sparse
+             tail of a contended batch pays device work proportional to
+             the live set instead of K.  Decisions stay in rank space
+             and are bit-identical to the masked loop (False; asserted
+             by tests and ``scripts/ci.sh --compact-smoke``).  Only
+             meaningful with ``incremental=True``.
     Returns:
-      (new store, trace).  ``new_store.gv`` equals ``store.gv + K``.
+      (new store, trace).  ``new_store.gv`` equals ``store.gv`` + the
+      number of real (non-vacant) transactions.
     """
     k = batch.n_txns
     n_obj = store.n_objects
@@ -107,90 +123,113 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     rank = rank_from_order(order)
     gv0 = store.gv
     seq_nos = gv0 + 1 + rank   # version stamp per txn (its seq position)
+    real = batch.n_ins > 0     # vacant rows (bucket padding) never commit
+    n_real = real.sum(dtype=jnp.int32)
 
-    def round_body(state):
-        rs, gv, n_comm, rnd, tr = state
+    def round_body_at(width: int):
+        full = width >= k
 
-        # --- masked read phase: only pending txns re-execute -------------
-        live = rank >= n_comm if incremental else jnp.ones((k,), bool)
-        rs = protocol.refresh_round_state(rs, batch, live)
-        res: TxnResult = rs.res
+        def round_body(state):
+            rs, gv, n_comm, rnd, tr = state
 
-        # --- carried conflict analysis + prefix fixpoint (txn space) -----
-        committing_t = protocol.prefix_commit(
-            res, rs.conflict, order, rank, n_comm, n_obj)
+            # --- read phase: only pending txns re-execute; below the full
+            # rung they execute gather-compacted at (width, L) ------------
+            pending_t = real & (rank >= n_comm)
+            live = pending_t if incremental else jnp.ones((k,), bool)
+            if full:
+                rs = protocol.refresh_round_state(rs, batch, live)
+            else:
+                rs, _, _, _ = protocol.refresh_round_state_compact(
+                    rs, batch, live, width)
+            res: TxnResult = rs.res
 
-        # --- fused write-back: the whole prefix in one scatter -----------
-        values, versions = protocol.fused_write_back(
-            rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
-            committing_t, rank, seq_nos)
+            # --- carried conflict analysis + prefix fixpoint (txn space) -
+            committing_t = protocol.prefix_commit(
+                res, rs.conflict, order, rank, n_comm, n_obj, real)
 
-        n_new = committing_t.sum(dtype=jnp.int32)
-        gv = gv + n_new
+            # --- fused write-back: the whole prefix in one scatter -------
+            values, versions = protocol.fused_write_back(
+                rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
+                committing_t, rank, seq_nos)
 
-        # ---- live promotion (paper §2.2.3): the first NON-committing
-        # pending transaction is now the fast transaction — re-execute it
-        # against the freshly-committed store and commit unconditionally.
-        promoted_pos = -jnp.ones((), jnp.int32)
-        if live_promotion:
-            head_pos = n_comm + n_new
+            n_new = committing_t.sum(dtype=jnp.int32)
+            gv = gv + n_new
 
-            def promote(args):
-                values, versions, gv = args
-                t = order[jnp.clip(head_pos, 0, k - 1)]
-                row = jax.tree.map(lambda a: a[t], batch)
-                raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
-                del raddrs2, rn2
-                values, versions = protocol.apply_writes(
-                    values, versions, waddrs2, wvals2, wn2,
-                    gv0 + head_pos + 1)
-                return values, versions, gv + 1
+            # ---- live promotion (paper §2.2.3): the first NON-committing
+            # pending transaction is now the fast transaction — re-execute
+            # it against the freshly-committed store and commit
+            # unconditionally.
+            promoted_pos = -jnp.ones((), jnp.int32)
+            if live_promotion:
+                head_pos = n_comm + n_new
 
-            do_promote = head_pos < k
-            values, versions, gv = jax.lax.cond(
-                do_promote, promote, lambda a: a, (values, versions, gv))
-            promoted_pos = jnp.where(do_promote, head_pos, -1)
-            n_new = n_new + do_promote.astype(jnp.int32)
+                def promote(args):
+                    values, versions, gv = args
+                    t = order[jnp.clip(head_pos, 0, k - 1)]
+                    row = jax.tree.map(lambda a: a[t], batch)
+                    raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
+                    del raddrs2, rn2
+                    values, versions = protocol.apply_writes(
+                        values, versions, waddrs2, wvals2, wn2,
+                        gv0 + head_pos + 1)
+                    return values, versions, gv + 1
 
-        # --- trace bookkeeping: all txn-space, all elementwise -----------
-        pending_t = rank >= n_comm
-        is_head_t = rank == n_comm
-        promoted_t = rank == promoted_pos
-        committing_all = committing_t | promoted_t
-        mode_t = jnp.where(
-            committing_all,
-            jnp.where(is_head_t | promoted_t, MODE_FAST, MODE_PREFIX),
-            jnp.where(pending_t, MODE_SPEC, MODE_UNSET))
-        commit_round = jnp.maximum(tr["commit_round"],
-                                   jnp.where(committing_all, rnd, -1))
-        first_round = jnp.minimum(
-            tr["first_round"],
-            jnp.where(pending_t, rnd, jnp.iinfo(jnp.int32).max))
-        retries = tr["retries"] + (pending_t & ~committing_all)
-        mode = jnp.maximum(tr["mode"], mode_t)
-        wait_rounds = tr["wait_rounds"] + (pending_t & ~committing_all)
-        # validation: head (fast) validates nothing; everyone else pending
-        # validates its read set this round (paper Fig. 2b line 9 / 2c
-        # line 2) — a single masked reduction
-        validation_words = tr["validation_words"] + jnp.where(
-            pending_t & ~is_head_t, res.rn, 0).sum(dtype=jnp.int32)
-        exec_ops = tr["exec_ops"] + jnp.where(
-            pending_t, batch.n_ins, 0).sum(dtype=jnp.int32) \
-            + jnp.where(promoted_t, batch.n_ins,
-                        0).sum(dtype=jnp.int32)  # promotion re-execution
-        promotions = tr["promotions"] + promoted_t.sum(dtype=jnp.int32)
-        live_per_round = tr["live_per_round"].at[rnd].set(
-            live.sum(dtype=jnp.int32))
-        tr = dict(tr, commit_round=commit_round, first_round=first_round,
-                  retries=retries, mode=mode, wait_rounds=wait_rounds,
-                  validation_words=validation_words, exec_ops=exec_ops,
-                  promotions=promotions, live_per_round=live_per_round)
-        rs = protocol.commit_round_state(rs, values, versions)
-        return rs, gv, n_comm + n_new, rnd + 1, tr
+                do_promote = head_pos < n_real
+                values, versions, gv = jax.lax.cond(
+                    do_promote, promote, lambda a: a,
+                    (values, versions, gv))
+                promoted_pos = jnp.where(do_promote, head_pos, -1)
+                n_new = n_new + do_promote.astype(jnp.int32)
 
-    def cond(state):
-        _, _, n_comm, rnd, _ = state
-        return (n_comm < k) & (rnd < limit)
+            # --- trace bookkeeping: all txn-space, all elementwise -------
+            is_head_t = rank == n_comm
+            promoted_t = rank == promoted_pos
+            committing_all = committing_t | promoted_t
+            mode_t = jnp.where(
+                committing_all,
+                jnp.where(is_head_t | promoted_t, MODE_FAST, MODE_PREFIX),
+                jnp.where(pending_t, MODE_SPEC, MODE_UNSET))
+            commit_round = jnp.maximum(tr["commit_round"],
+                                       jnp.where(committing_all, rnd, -1))
+            first_round = jnp.minimum(
+                tr["first_round"],
+                jnp.where(pending_t, rnd, jnp.iinfo(jnp.int32).max))
+            retries = tr["retries"] + (pending_t & ~committing_all)
+            mode = jnp.maximum(tr["mode"], mode_t)
+            wait_rounds = tr["wait_rounds"] + (pending_t & ~committing_all)
+            # validation: head (fast) validates nothing; everyone else
+            # pending validates its read set this round (paper Fig. 2b
+            # line 9 / 2c line 2) — a single masked reduction
+            validation_words = tr["validation_words"] + jnp.where(
+                pending_t & ~is_head_t, res.rn, 0).sum(dtype=jnp.int32)
+            exec_ops = tr["exec_ops"] + jnp.where(
+                pending_t, batch.n_ins, 0).sum(dtype=jnp.int32) \
+                + jnp.where(promoted_t, batch.n_ins,
+                            0).sum(dtype=jnp.int32)  # promotion re-exec
+            promotions = tr["promotions"] + promoted_t.sum(dtype=jnp.int32)
+            live_per_round = tr["live_per_round"].at[rnd].set(
+                live.sum(dtype=jnp.int32))
+            tr = dict(tr, commit_round=commit_round,
+                      first_round=first_round, retries=retries, mode=mode,
+                      wait_rounds=wait_rounds,
+                      validation_words=validation_words, exec_ops=exec_ops,
+                      promotions=promotions, live_per_round=live_per_round)
+            rs = protocol.commit_round_state(rs, values, versions)
+            return rs, gv, n_comm + n_new, rnd + 1, tr
+
+        return round_body
+
+    def cond_at(next_width: int):
+        def cond(state):
+            _, _, n_comm, rnd, _ = state
+            go = (n_comm < n_real) & (rnd < limit)
+            if next_width:
+                # hand over to the narrower rung once the pending suffix
+                # fits it
+                go = go & (n_real - n_comm > next_width)
+            return go
+
+        return cond
 
     limit = max_rounds if max_rounds is not None else k + 1
     tr0 = dict(
@@ -205,28 +244,36 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         live_per_round=jnp.full((limit,), -1, jnp.int32),
     )
     rs0 = protocol.init_round_state(batch, store.values, store.versions)
-    rs, gv, n_comm, rnd, tr = jax.lax.while_loop(
-        cond, round_body,
-        (rs0, store.gv, jnp.zeros((), jnp.int32),
-         jnp.zeros((), jnp.int32), tr0))
+    ladder = (protocol.compact_ladder(k) if (incremental and compact)
+              else [k])
+    state = (rs0, store.gv, jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32), tr0)
+    state = protocol.run_compact_cascade(ladder, state, round_body_at,
+                                         cond_at)
+    rs, gv, n_comm, rnd, tr = state
 
     trace = make_trace(
         k,
-        commit_round=tr["commit_round"], first_round=tr["first_round"],
+        commit_round=tr["commit_round"],
+        first_round=jnp.where(real, tr["first_round"], -1),
         retries=tr["retries"], mode=tr["mode"],
         wait_rounds=tr["wait_rounds"], rounds=rnd,
         validation_words=tr["validation_words"], exec_ops=tr["exec_ops"],
         promotions=tr["promotions"],
         live_txns=rs.live_txns, live_slots=rs.live_slots,
+        walked_slots=rs.walked_slots,
         live_per_round=tr["live_per_round"],
-        # PCC commits in sequence order: position = rank in the order
-        commit_pos=rank)
+        # PCC commits in sequence order: position = rank in the order.
+        # Vacant rows and rows a max_rounds cap left uncommitted
+        # (commit_round < 0) are not part of the history: commit_pos -1
+        commit_pos=jnp.where(real & (tr["commit_round"] >= 0), rank, -1))
     return TStore(values=rs.values, versions=rs.versions, gv=gv), trace
 
 
 pcc_execute = jax.jit(
     _pcc_execute,
-    static_argnames=("max_rounds", "live_promotion", "incremental"))
+    static_argnames=("max_rounds", "live_promotion", "incremental",
+                     "compact"))
 
 
 def _pcc_raw(store, batch, seq, lanes, n_lanes):

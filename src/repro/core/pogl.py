@@ -49,13 +49,22 @@ def _pogl_raw(store, batch, seq, lanes, n_lanes):
     # argsort once; the rank is its inverse permutation (one scatter)
     order = jnp.argsort(seq)
     rank = rank_from_order(order)
+    # vacant rows (bucket padding, n_ins == 0; they sort after every real
+    # row) execute as no-ops but never commit: no gv advance, no position
+    real = batch.n_ins > 0
+    n_real = real.sum(dtype=jnp.int32)
     # one txn per serial "round", uninstrumented (global lock = fast path)
     trace = make_trace(
-        k, commit_round=rank, commit_pos=rank, first_round=rank,
-        mode=jnp.full((k,), MODE_FAST, jnp.int32),
-        rounds=jnp.asarray(k, jnp.int32),
+        k, commit_round=jnp.where(real, rank, -1),
+        commit_pos=jnp.where(real, rank, -1),
+        first_round=jnp.where(real, rank, -1),
+        mode=jnp.where(real, MODE_FAST, 0).astype(jnp.int32),
+        rounds=n_real,
         exec_ops=batch.n_ins.sum(dtype=jnp.int32))
-    return _pogl_ordered(store, batch, order), trace
+    out = _pogl_ordered(store, batch, order)
+    out = TStore(values=out.values, versions=out.versions,
+                 gv=store.gv + n_real)
+    return out, trace
 
 
 register_engine(EngineDef(

@@ -34,6 +34,28 @@ every reduction, so the incremental loop is bit-identical to the
 from-scratch rebuild (``incremental=False`` on every engine, asserted
 by tests and by ``scripts/ci.sh --incremental-smoke``).
 
+**Gather-compacted rounds** (PR 4) — the masked executor still walks the
+full static (K, L) grid even when only a handful of rows are live
+(shapes are static under jit).  Engines therefore run their round loop
+as a *cascade* over :func:`compact_ladder` widths: once the live set
+fits a narrower rung C, the read phase gathers the live rows into a
+(C, L) block, executes that
+(:func:`refresh_round_state_compact` / the caller-ordered
+:func:`refresh_round_state_gathered`), and scatters results — plus the
+packed-footprint rows and the conflict table's refreshed row/column
+strips (``kernels.ops.conflict_matrix_delta_compact``, two rectangular
+bitset-intersection strips instead of a K×K pass) — back to full-K
+positions.  Commit decisions and the fused write-back stay in rank
+space, so the cascade is bit-identical to the masked loop
+(``compact=False``; asserted by tests and ``scripts/ci.sh
+--compact-smoke``); only the device work changes, from K·L to C·L per
+round (``RoundState.walked_slots`` / ``ExecTrace.walked_slots``).
+DeSTM's ≤ n_lanes rounds are the degenerate always-compact case: its
+members run through :func:`refresh_round_state_gathered` in token
+order at width n_lanes.  Vacant rows (``n_ins == 0`` — shape-bucket
+padding from ``PotSession.submit``) never enter a live set and never
+commit; :func:`prefix_commit` takes the ``real`` mask to enforce it.
+
 **Vectorized commit pipeline** (PR 2) — the batched commit machinery
 shared by PCC / OCC / DeSTM.  Instead of walking K transactions through
 a `lax.scan` with an O(n_objects) bitmap probe and a `lax.cond`
@@ -74,7 +96,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.txn import TxnBatch, TxnResult, run_live
+from repro.core.txn import (TxnBatch, TxnResult, gather_live_indices,
+                            next_pow2, run_compact, run_live,
+                            scatter_result, scatter_rows)
 from repro.kernels import ops as kernel_ops
 
 
@@ -225,6 +249,9 @@ class RoundState:
     live: jax.Array          # (K,) bool — rows refreshed this round
     live_txns: jax.Array     # () int32 — Σ rounds live count
     live_slots: jax.Array    # () int32 — Σ rounds live instruction slots
+    walked_slots: jax.Array  # () int32 — Σ rounds executor width × L (the
+    #   device slots the read phase actually walked; K·L per masked
+    #   round, C·L per compact round — see ExecTrace.walked_slots)
 
 
 def init_round_state(batch: TxnBatch, values: jax.Array,
@@ -264,7 +291,7 @@ def init_round_state(batch: TxnBatch, values: jax.Array,
         values=values, versions=versions, res=res, conflict=conflict,
         foot_bits=foot_bits, write_bits=write_bits,
         live=z((k,), bool), live_txns=z((), jnp.int32),
-        live_slots=z((), jnp.int32))
+        live_slots=z((), jnp.int32), walked_slots=z((), jnp.int32))
 
 
 def refresh_round_state(state: RoundState, batch: TxnBatch,
@@ -299,19 +326,131 @@ def refresh_round_state(state: RoundState, batch: TxnBatch,
                 res.raddrs, res.rn, res.waddrs, res.wn, n_obj)
             refresh = live[:, None] | live[None, :]
             conflict = jnp.where(refresh, fresh, conflict)
+    k, length = batch.opcodes.shape
     return RoundState(
         values=state.values, versions=state.versions, res=res,
         conflict=conflict, foot_bits=foot_bits, write_bits=write_bits,
         live=live,
         live_txns=state.live_txns + live.sum(dtype=jnp.int32),
         live_slots=state.live_slots
-        + jnp.where(live, batch.n_ins, 0).sum(dtype=jnp.int32))
+        + jnp.where(live, batch.n_ins, 0).sum(dtype=jnp.int32),
+        walked_slots=state.walked_slots + jnp.asarray(k * length, jnp.int32))
 
 
 def commit_round_state(state: RoundState, values: jax.Array,
                        versions: jax.Array) -> RoundState:
     """Fold a round's committed store image back into the carried state."""
     return dataclasses.replace(state, values=values, versions=versions)
+
+
+# --------------------------------------------------------------------------
+# Gather-compacted rounds (PR 4)
+# --------------------------------------------------------------------------
+
+
+def compact_ladder(k: int, min_width: int = 8, step: int = 4) -> list[int]:
+    """The descending compact widths an engine's round cascade runs at:
+    ``[k, p/step, p/step², ...]`` with ``p = next_pow2(k)``, stopping
+    above ``min_width`` (where gather/scatter overhead would eat the
+    saving).  Rung 0 is the full masked width (round 0's live set is the
+    whole batch); each later rung is entered only once the live count
+    fits it, so a rung-C round's device work is C·L, not K·L.  Shapes
+    are static under jit, hence a *static* ladder of loop bodies rather
+    than a per-round dynamic width; its length is O(log K), bounding
+    compile cost.
+    """
+    widths = [k]
+    c = next_pow2(k) // step
+    while c >= min_width and c < k:
+        widths.append(c)
+        c //= step
+    return widths
+
+
+def run_compact_cascade(ladder: list[int], state, body_at, cond_at):
+    """Drive an engine's round loop down the compact ladder: one
+    `lax.while_loop` per rung, where ``body_at(width)`` builds the round
+    body executing the read phase at that width and ``cond_at(next_width)``
+    builds the loop predicate that additionally hands over to the next
+    rung once the live set fits it (``next_width`` is 0 on the last rung —
+    no hand-over, run to completion).  The carried ``state`` pytree must
+    be rung-independent; only the body internals change width.  Shared by
+    PCC and OCC so the hand-over rule lives in exactly one place."""
+    for i, width in enumerate(ladder):
+        nxt = ladder[i + 1] if i + 1 < len(ladder) else 0
+        state = jax.lax.while_loop(cond_at(nxt), body_at(width), state)
+    return state
+
+
+def refresh_round_state_gathered(state: RoundState, batch: TxnBatch,
+                                 idx: jax.Array, valid: jax.Array
+                                 ) -> tuple[RoundState, TxnResult]:
+    """One round's read phase over a caller-gathered compact block: execute
+    rows ``batch[idx]`` (``valid`` masks gather padding, possibly with
+    duplicate indices) at width C = ``idx.shape[0]`` and scatter the
+    results — plus, when a conflict table is carried, the packed-footprint
+    rows and the table's refreshed row/column strips — back to full-K
+    positions.
+
+    The caller chooses the gather order: :func:`refresh_round_state_compact`
+    packs live rows ascending; DeSTM passes its round members in token
+    order so the returned compact block feeds the token walk directly.
+
+    Bit-identical post-conditions to :func:`refresh_round_state` with
+    ``live = scatter(valid at idx)`` (asserted in
+    tests/test_compact_bucket.py): row purity makes the compact execution
+    equal the masked one row-for-row, and decisions downstream stay in
+    rank space, so they cannot tell the two read phases apart.
+
+    Returns ``(state, cres)`` — the compact (C, L) result block is
+    exposed for engines that keep working at width C.
+    """
+    k, length = batch.opcodes.shape
+    width = idx.shape[0]
+    cres = run_compact(batch, state.values, idx, valid)
+    res = scatter_result(state.res, cres, idx, valid, k)
+    live = scatter_rows(jnp.zeros((k,), bool), valid, idx, valid)
+    conflict, foot_bits, write_bits = (
+        state.conflict, state.foot_bits, state.write_bits)
+    if conflict is not None:
+        n_obj = state.values.shape[0]
+        if foot_bits is not None:   # TPU: packed strips + pair kernel
+            foot_bits, write_bits = kernel_ops.update_packed_footprints_compact(
+                foot_bits, write_bits, cres.raddrs, cres.rn, cres.waddrs,
+                cres.wn, idx, valid, n_obj)
+            conflict = kernel_ops.conflict_matrix_delta_compact(
+                foot_bits, write_bits, conflict, idx, valid, n_obj)
+        else:                       # dense recompute-and-select fallback
+            fresh = kernel_ops._conflict_matrix_dense(
+                res.raddrs, res.rn, res.waddrs, res.wn, n_obj)
+            refresh = live[:, None] | live[None, :]
+            conflict = jnp.where(refresh, fresh, conflict)
+    return RoundState(
+        values=state.values, versions=state.versions, res=res,
+        conflict=conflict, foot_bits=foot_bits, write_bits=write_bits,
+        live=live,
+        live_txns=state.live_txns + valid.sum(dtype=jnp.int32),
+        live_slots=state.live_slots
+        + jnp.where(valid, batch.n_ins[idx], 0).sum(dtype=jnp.int32),
+        walked_slots=state.walked_slots
+        + jnp.asarray(width * length, jnp.int32)), cres
+
+
+def refresh_round_state_compact(state: RoundState, batch: TxnBatch,
+                                live: jax.Array, width: int
+                                ) -> tuple[RoundState, TxnResult,
+                                           jax.Array, jax.Array]:
+    """One round's read phase at compact width C = ``width``: gather the
+    live rows (ascending index) into a (C, L) block and refresh through
+    :func:`refresh_round_state_gathered`.  Requires
+    ``live.sum() <= width`` — the caller's rung invariant (engines only
+    descend a :func:`compact_ladder` rung once the live count fits it).
+
+    Returns ``(state, cres, idx, valid)``.
+    """
+    idx, valid = gather_live_indices(live, width)
+    state, cres = refresh_round_state_gathered(state, batch, idx, valid)
+    return state, cres, idx, valid
 
 
 def earlier_writer_conflicts(res, conflict, writer_mask: jax.Array,
@@ -350,7 +489,8 @@ def earlier_writer_conflicts(res, conflict, writer_mask: jax.Array,
 
 
 def prefix_commit(res, conflict, order: jax.Array, rank: jax.Array,
-                  n_comm: jax.Array, n_objects: int) -> jax.Array:
+                  n_comm: jax.Array, n_objects: int,
+                  real: jax.Array | None = None) -> jax.Array:
     """Maximal committing in-order prefix (PCC's ordered commit, §2.2.2).
 
     A pending position commits iff no position of this round's pending
@@ -362,11 +502,15 @@ def prefix_commit(res, conflict, order: jax.Array, rank: jax.Array,
     batched conflict query plus a cumulative AND — ≤⌈log₂K⌉ device
     steps via `associative_scan`.
 
-    n_comm: () int32 count of already-committed positions.  Returns
+    n_comm: () int32 count of already-committed positions.  ``real``
+    optionally masks out *vacant* rows (bucket padding, ``n_ins == 0`` —
+    they sort after every real row and must never commit).  Returns
     committing (K,) bool in TXN space.
     """
     k = rank.shape[0]
     pending = rank >= n_comm
+    if real is not None:
+        pending = pending & real
     bad = earlier_writer_conflicts(res, conflict, pending, rank, n_objects)
     # positions before the pending window never break the chain
     ok_pos = jnp.where(jnp.arange(k) >= n_comm, ~bad[order], True)

@@ -11,6 +11,20 @@ A session owns the three pieces Pot threads through time:
   buffers *donated* — on accelerators the committed image is updated in
   place instead of copied every batch.
 
+**Shape bucketing** (PR 4): a ragged stream of batch shapes would force
+one XLA compile per distinct ``(K, L)`` — a serving-workload killer.
+``submit`` therefore pads every batch up to the next power-of-two bucket
+with *vacant* NOP rows (``n_ins == 0``; sequence numbers past every real
+row's), so the jitted step compiles once per (engine, bucket): a 32-shape
+ragged stream compiles at most ladder-size (= log₂ range) steps.  The
+engines guarantee vacant rows never commit — no store write, no version
+stamp, no ``gv`` advance, ``commit_pos == -1`` — so fingerprints and
+``replay_log()`` are bit-identical to the unpadded run (asserted in
+tests/test_compact_bucket.py).  The returned traces are sliced back to
+the real K, so callers never see padding.  Observables:
+``compile_count()`` (distinct compiled step shapes this session
+triggered) and ``bucket_counts()`` (batches per bucket).
+
 Usage::
 
     session = PotSession(n_objects=1024, engine="pcc", n_lanes=8)
@@ -18,6 +32,7 @@ Usage::
         trace = session.submit(batch, lanes)       # one ExecTrace each
     session.fingerprint()                          # determinism check
     log = session.replay_log()                     # global commit order
+    session.compile_count()                        # <= #buckets, not #shapes
 
 The recorded log feeds straight back into a new session for
 record/replay debugging (paper §2.1)::
@@ -32,6 +47,7 @@ signature anywhere above this layer.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Iterable, Sequence
 
@@ -43,7 +59,12 @@ from repro.core.engine import EngineDef, ExecTrace, get_engine
 from repro.core.sequencer import ReplaySequencer, RoundRobinSequencer
 from repro.core.tstore import TStore, make_store
 from repro.core.tstore import fingerprint as store_fingerprint
-from repro.core.txn import TxnBatch
+from repro.core.txn import TxnBatch, next_pow2, pad_batch
+
+# per-transaction ExecTrace fields, sliced back to the real K after a
+# bucketed submit (everything else is scalar or per-round)
+_PER_TXN_FIELDS = ("commit_round", "commit_pos", "first_round", "retries",
+                   "mode", "wait_rounds")
 
 
 @functools.lru_cache(maxsize=None)
@@ -71,12 +92,18 @@ class PotSession:
       n_lanes: lane count (round-robin width, DeSTM round width).
       donate: donate the store buffers to the jitted step (in-place
         update on backends that support it).
+      bucket: pad ragged batch shapes up to power-of-two buckets with
+        vacant NOP rows so the jitted step compiles per bucket, not per
+        exact shape (bit-identical outcome; see the module docstring).
+        False submits exact shapes (one compile each — the pre-PR4
+        behavior, kept for benchmarking the recompile cost).
     """
 
     def __init__(self, n_objects: int | None = None, *, slot: int = 1,
                  init=None, store: TStore | None = None,
                  engine: str | EngineDef = "pcc", sequencer=None,
-                 n_lanes: int = 1, donate: bool = True):
+                 n_lanes: int = 1, donate: bool = True,
+                 bucket: bool = True):
         if store is None:
             if n_objects is None:
                 raise ValueError("PotSession needs n_objects or store")
@@ -87,15 +114,27 @@ class PotSession:
         self.n_lanes = n_lanes
         self.sequencer = sequencer if sequencer is not None \
             else RoundRobinSequencer(n_root_lanes=n_lanes)
+        self.bucket = bucket
         self._step = _jitted_step(self.engine.name, donate)
         self.traces: list[ExecTrace] = []
         # replay log cache, materialized lazily (device->host sync happens
         # in replay_log(), never on the hot submit path)
         self._log: list[int] = []
         self._log_batches = 0      # traces already folded into _log
+        self._log_txns = 0         # Σ n_txns of those traces (id offset)
         self._n_txns = 0
+        # compile-cache observables: step shapes this session triggered
+        # (one XLA compile each) and batches submitted per bucket
+        self._bucket_counts: dict[tuple[int, int], int] = {}
 
     # ------------------------------------------------------------- stream
+    def _bucket_shape(self, batch: TxnBatch) -> tuple[int, int]:
+        """The (K, L) step shape a batch runs at: the next power-of-two
+        bucket when bucketing, the exact shape otherwise."""
+        if not self.bucket:
+            return batch.n_txns, batch.max_ins
+        return next_pow2(batch.n_txns), next_pow2(batch.max_ins)
+
     def submit(self, batch: TxnBatch, lanes: Sequence | None = None
                ) -> ExecTrace:
         """Sequence and execute one batch against the session store.
@@ -103,6 +142,11 @@ class PotSession:
         ``lanes`` is the per-txn sequencing key — lane ids for the
         round-robin sequencer, txn names for an ``ExplicitSequencer``,
         ignored by a ``ReplaySequencer``.  Defaults to one lane.
+
+        With bucketing on, the batch is padded to its shape bucket with
+        vacant NOP rows (sequence numbers past every real one, so they
+        never commit) before hitting the jitted step; the returned trace
+        is sliced back to the batch's real K rows.
         """
         k = batch.n_txns
         keys = list(lanes) if lanes is not None else [0] * k
@@ -110,9 +154,21 @@ class PotSession:
             raise ValueError(f"batch has {k} txns, got {len(keys)} lanes")
         seq = np.asarray(self.sequencer.order_for(keys), np.int64)
         lane_ids = self._lane_ids(keys)
+        bk, bl = self._bucket_shape(batch)
+        self._bucket_counts[(bk, bl)] = \
+            self._bucket_counts.get((bk, bl), 0) + 1
+        if (bk, bl) != (k, batch.max_ins):
+            batch = pad_batch(batch, bk, bl)
+            base = seq.max() if k else 0
+            seq = np.concatenate([seq, base + 1 + np.arange(bk - k)])
+            lane_ids = np.concatenate(
+                [lane_ids, np.zeros((bk - k,), lane_ids.dtype)])
         self.store, trace = self._step(
             self.store, batch, jnp.asarray(seq, jnp.int32),
             jnp.asarray(lane_ids, jnp.int32), self.n_lanes)
+        if bk != k:   # slice vacant rows back off (lazy device ops)
+            trace = dataclasses.replace(trace, **{
+                f: getattr(trace, f)[:k] for f in _PER_TXN_FIELDS})
         # the trace stays on device: the commit order is recorded by
         # keeping the trace, and replay_log() materializes it on demand —
         # no device->host sync on the streaming hot path.
@@ -123,7 +179,11 @@ class PotSession:
     def run_stream(self, batches: Iterable[TxnBatch],
                    lanes: Sequence[Sequence] | None = None
                    ) -> list[ExecTrace]:
-        """Submit a whole stream of batches; returns one trace each."""
+        """Submit a whole stream of batches; returns one trace each.
+
+        The stream may be ragged — batches of arbitrary (K, L) shapes —
+        and still compiles at most one step per shape bucket (the
+        bucketed ``submit`` path; ``compile_count()`` proves it)."""
         batches = list(batches)
         lanes_list = list(lanes) if lanes is not None \
             else [None] * len(batches)
@@ -156,18 +216,41 @@ class PotSession:
         """Order-sensitive hash of the committed store image."""
         return int(store_fingerprint(self.store))
 
+    def compile_count(self) -> int:
+        """Distinct compiled step shapes this session has triggered — each
+        one is an XLA compilation of the engine step.  With bucketing this
+        is bounded by the bucket-ladder size regardless of how ragged the
+        stream is; without it, every distinct (K, L) compiles.  (Shapes
+        already compiled by an earlier same-engine session are served from
+        jit's cache, so this is an upper bound on compiles actually paid.)
+        """
+        return len(self._bucket_counts)
+
+    def bucket_counts(self) -> dict[tuple[int, int], int]:
+        """Batches submitted per (K, L) step-shape bucket — the occupancy
+        observable behind :meth:`compile_count`."""
+        return dict(self._bucket_counts)
+
     def replay_log(self) -> list[int]:
         """Global commit order across the whole stream: entry i is the
         global txn id (batch offset + index) that committed i-th.
 
         Materialized lazily from the recorded traces (this is where the
         device->host sync happens); incremental, so repeated calls only
-        pay for batches submitted since the last call."""
+        pay for batches submitted since the last call.  Rows with
+        ``commit_pos < 0`` (vacant bucket padding / uncommitted) are not
+        part of the history and are skipped."""
         for trace in self.traces[self._log_batches:]:
-            offset = len(self._log)   # one log entry per committed txn
-            order = np.argsort(np.asarray(trace.commit_pos), kind="stable")
+            # global txn ids offset by the txns of all PRIOR batches (not
+            # by log length: a batch can log fewer entries than its k if
+            # rows never committed, and ids must not shift)
+            offset = self._log_txns
+            cp = np.asarray(trace.commit_pos)
+            order = np.argsort(cp, kind="stable")
+            order = order[cp[order] >= 0]
             self._log.extend(int(t) + offset for t in order)
             self._log_batches += 1
+            self._log_txns += trace.n_txns
         return list(self._log)
 
     def live_counts(self) -> list[np.ndarray]:

@@ -68,7 +68,15 @@ class TxnResult:
 
 def make_batch(progs: list[list[tuple]], max_ins: int | None = None) -> TxnBatch:
     """Build a TxnBatch from python programs: each a list of
-    (opcode, addr, indirect, operand) tuples."""
+    (opcode, addr, indirect, operand) tuples.
+
+    NB: a row with ``n_ins == 0`` is a *vacant* row — since PR 4 the
+    engines treat it as absent (never committed, no sequence position,
+    no ``gv`` advance, ``commit_pos == -1``), because that is how
+    ``PotSession`` encodes shape-bucket padding (:func:`pad_batch`).  An
+    intentionally empty transaction should be a single NOP instruction
+    (``[(NOP, 0, False, 0)]``), which commits normally with an empty
+    footprint."""
     k = len(progs)
     length = max_ins or max((len(p) for p in progs), default=1)
     length = max(length, 1)
@@ -153,6 +161,36 @@ def run_all(batch: TxnBatch, values: jax.Array) -> TxnResult:
     return TxnResult(raddrs=raddrs, rn=rn, waddrs=waddrs, wvals=wvals, wn=wn)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def pad_batch(batch: TxnBatch, n_txns: int, max_ins: int) -> TxnBatch:
+    """Pad a batch with vacant NOP rows / inert instruction columns up to
+    (n_txns, max_ins) — the shape-bucketing primitive.
+
+    Padded rows have ``n_ins == 0`` (the *vacant row* convention: engines
+    treat them as absent — never pending, never committing, no sequence
+    number consumed, ``commit_pos == -1``).  Padded columns are NOP slots
+    past every row's ``n_ins``, so real rows execute bit-identically: the
+    executor's instruction predicate ``t < n_ins`` is false on them.
+    """
+    k, length = batch.opcodes.shape
+    pk, pl = n_txns - k, max_ins - length
+    if pk < 0 or pl < 0:
+        raise ValueError(
+            f"pad_batch target ({n_txns}, {max_ins}) smaller than ({k}, "
+            f"{length})")
+    if pk == 0 and pl == 0:
+        return batch
+    pad2 = lambda a: jnp.pad(a, ((0, pk), (0, pl)))
+    return TxnBatch(
+        opcodes=pad2(batch.opcodes), addrs=pad2(batch.addrs),
+        indirect=pad2(batch.indirect), operands=pad2(batch.operands),
+        n_ins=jnp.pad(batch.n_ins, (0, pk)))
+
+
 def run_live(batch: TxnBatch, values: jax.Array, live: jax.Array,
              cache: TxnResult | None = None) -> TxnResult:
     """Masked re-execution: run only the *live* transactions, reuse cached
@@ -189,3 +227,89 @@ def run_live(batch: TxnBatch, values: jax.Array, live: jax.Array,
         return jnp.where(mask, new, old)
 
     return jax.tree.map(merge, fresh, cache)
+
+
+# --------------------------------------------------------------------------
+# Gather-compacted execution (PR 4)
+# --------------------------------------------------------------------------
+#
+# The masked executor above still walks the full static (K, L) grid even
+# when only a handful of rows are live (shapes are static under jit).
+# When live_count <= width << K, the compact path gathers the live rows
+# into a bounded (width, L) block, executes THAT, and scatters the
+# results back — device work proportional to the live set, not the batch
+# capacity.  Row purity makes it bit-identical to the masked path: a
+# transaction's execution depends only on its own program and the store
+# image, never on which other rows share the vmap.
+
+
+def gather_live_indices(live: jax.Array, width: int
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Pack the live row indices into the first slots of a (width,) index
+    vector: returns ``(idx, valid)`` where ``idx`` holds every live row's
+    index (ascending) in its leading ``live.sum()`` slots and ``valid``
+    flags them.  Requires ``live.sum() <= width`` — callers guarantee it
+    by choosing ``width`` from the compact ladder (protocol.compact_ladder)
+    and only descending a rung once the live count fits.
+    """
+    idx = jnp.argsort(jnp.where(live, 0, 1), stable=True)[:width]
+    idx = idx.astype(jnp.int32)
+    return idx, live[idx]
+
+
+def run_compact(batch: TxnBatch, values: jax.Array, idx: jax.Array,
+                valid: jax.Array) -> TxnResult:
+    """Execute the gathered rows ``batch[idx]`` against ``values`` at
+    compact width C = idx.shape[0].  Rows with ``~valid`` (gather padding,
+    possibly duplicate indices) run inert (``n_ins`` masked to 0) and come
+    back with empty footprints.  Valid rows are bit-identical to the same
+    rows of ``run_all(batch, values)``."""
+    cbatch = jax.tree.map(lambda a: a[idx], batch)
+    cbatch = TxnBatch(
+        opcodes=cbatch.opcodes, addrs=cbatch.addrs,
+        indirect=cbatch.indirect, operands=cbatch.operands,
+        n_ins=jnp.where(valid, cbatch.n_ins, 0))
+    return run_all(cbatch, values)
+
+
+def scatter_rows(dst: jax.Array, src: jax.Array, idx: jax.Array,
+                 valid: jax.Array) -> jax.Array:
+    """Scatter compact rows back to full width: row ``idx[c]`` of ``dst``
+    takes row c of ``src`` where ``valid[c]``; other rows are untouched.
+
+    THE sentinel-drop idiom of the compact path, kept in one place
+    because its safety argument is subtle: invalid slots of ``idx`` may
+    hold DUPLICATE indices (gather padding clips to valid range), so
+    they must be routed to the out-of-bounds sentinel and dropped —
+    never masked by a `where` on the gathered value, which would still
+    scatter the duplicate and make the result order-dependent."""
+    tgt = jnp.where(valid, idx, dst.shape[0])
+    return dst.at[tgt].set(src, mode="drop")
+
+
+def scatter_result(cache: TxnResult, cres: TxnResult, idx: jax.Array,
+                   valid: jax.Array, n_rows: int) -> TxnResult:
+    """Scatter compact result rows back to their full-width positions:
+    row ``idx[c]`` of the output takes row c of ``cres`` where
+    ``valid[c]``; every other row keeps its ``cache`` entry."""
+    del n_rows  # every leaf's leading axis is the full width
+    return jax.tree.map(
+        lambda old, new: scatter_rows(old, new, idx, valid), cache, cres)
+
+
+def run_live_compact(batch: TxnBatch, values: jax.Array, live: jax.Array,
+                     cache: TxnResult, width: int
+                     ) -> tuple[TxnResult, TxnResult, jax.Array, jax.Array]:
+    """Compact equivalent of :func:`run_live`: gather the live rows into a
+    (width, L) block, execute it, scatter back over ``cache``.
+
+    Returns ``(merged, cres, idx, valid)`` — ``merged`` is bit-identical
+    to ``run_live(batch, values, live, cache)`` whenever
+    ``live.sum() <= width`` (asserted in tests); ``cres``/``idx``/``valid``
+    expose the compact block for callers that keep working at width C
+    (the incremental conflict-strip update, DeSTM's token walk).
+    """
+    idx, valid = gather_live_indices(live, width)
+    cres = run_compact(batch, values, idx, valid)
+    merged = scatter_result(cache, cres, idx, valid, batch.n_txns)
+    return merged, cres, idx, valid

@@ -26,6 +26,15 @@ conflict_matrix_bits_delta recomputes just the rows/columns of the
 round's live transactions (masked-row variant of the same kernel —
 blocks with no live row/column skip the intersection and carry last
 round's tile).
+
+Gather-compacted rounds (PR 4) shrink the delta further: with the C live
+rows gathered into a compact block, the update is two *rectangular*
+products (conflict_matrix_bits_pair) — the (C, K) row strip of live
+footprints against every write set and the (K, C) column strip of every
+footprint against the live write sets — scattered over the carried
+table (ops.conflict_matrix_delta_compact): O(C·K·W) device work with no
+K² term at all, vs the masked delta's K²-shaped grid whose dead blocks
+skip work but still launch.
 """
 
 from __future__ import annotations
@@ -120,17 +129,22 @@ def conflict_matrix_bits_delta(foot_bits: jax.Array, write_bits: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def conflict_matrix_bits(foot_bits: jax.Array, write_bits: jax.Array,
-                         *, interpret: bool = False) -> jax.Array:
-    """conflict (K, K) bool — foot_bits (K, W) int32, write_bits (K, W) int32.
+def conflict_matrix_bits_pair(foot_bits: jax.Array, write_bits: jax.Array,
+                              *, interpret: bool = False) -> jax.Array:
+    """Rectangular bitset intersection: out (M, N) bool with
+    out[i, j] = any_w(foot_bits[i, w] & write_bits[j, w]), for
+    foot_bits (M, W) vs write_bits (N, W) over DIFFERENT row sets.
 
-    K must be a multiple of lcm(BI, BJ) and W a multiple of BW (callers
-    pad; see ops.conflict_matrix).  Row i / column j of the result refer
-    to the same transaction ordering as the input rows.
+    The gather-compacted round update (ops.conflict_matrix_delta_compact)
+    asks exactly this twice per round: a (C, K) row strip — the C live
+    footprints against every write set — and a (K, C) column strip — every
+    footprint against the C live write sets — instead of the full (K, K)
+    product.  M must be a multiple of BI, N of BJ, W of BW (callers pad).
     """
-    k, w = foot_bits.shape
-    assert k % BI == 0 and k % BJ == 0 and w % BW == 0, (k, w)
-    grid = (k // BI, k // BJ, w // BW)
+    m, w = foot_bits.shape
+    n = write_bits.shape[0]
+    assert m % BI == 0 and n % BJ == 0 and w % BW == 0, (m, n, w)
+    grid = (m // BI, n // BJ, w // BW)
     out = pl.pallas_call(
         _conflict_kernel,
         grid=grid,
@@ -139,7 +153,21 @@ def conflict_matrix_bits(foot_bits: jax.Array, write_bits: jax.Array,
             pl.BlockSpec((BJ, BW), lambda i, j, v: (j, v)),
         ],
         out_specs=pl.BlockSpec((BI, BJ), lambda i, j, v: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((k, k), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(foot_bits, write_bits)
     return out != 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conflict_matrix_bits(foot_bits: jax.Array, write_bits: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """conflict (K, K) bool — foot_bits (K, W) int32, write_bits (K, W) int32.
+
+    K must be a multiple of lcm(BI, BJ) and W a multiple of BW (callers
+    pad; see ops.conflict_matrix).  Row i / column j of the result refer
+    to the same transaction ordering as the input rows.  The square case
+    of :func:`conflict_matrix_bits_pair`.
+    """
+    return conflict_matrix_bits_pair(foot_bits, write_bits,
+                                     interpret=interpret)

@@ -124,6 +124,70 @@ def update_packed_footprints(foot_bits: jax.Array, write_bits: jax.Array,
             jnp.where(keep, fresh_write, write_bits))
 
 
+def update_packed_footprints_compact(foot_bits: jax.Array,
+                                     write_bits: jax.Array,
+                                     raddrs: jax.Array, rn: jax.Array,
+                                     waddrs: jax.Array, wn: jax.Array,
+                                     idx: jax.Array, valid: jax.Array,
+                                     n_objects: int
+                                     ) -> tuple[jax.Array, jax.Array]:
+    """Compact variant of :func:`update_packed_footprints`: the round's
+    re-executed rows arrive as a gathered (C, L) block
+    (``raddrs``/``rn``/``waddrs``/``wn`` from ``txn.run_compact``) plus
+    the row indices they came from; pack just those C rows — O(C·L)
+    instead of O(K·L) — and scatter them over the carried (K, W) words.
+    ``valid`` masks gather padding (possibly duplicate indices), which is
+    dropped rather than scattered."""
+    from repro.core.txn import scatter_rows
+    cfoot, cwrite = packed_footprints(
+        raddrs, jnp.where(valid, rn, 0), waddrs, jnp.where(valid, wn, 0),
+        n_objects)
+    return (scatter_rows(foot_bits, cfoot, idx, valid),
+            scatter_rows(write_bits, cwrite, idx, valid))
+
+
+def conflict_matrix_delta_compact(foot_bits: jax.Array,
+                                  write_bits: jax.Array, old: jax.Array,
+                                  idx: jax.Array, valid: jax.Array,
+                                  n_objects: int) -> jax.Array:
+    """Compacted variant of :func:`conflict_matrix_delta`: instead of a
+    masked pass over the full (K, K) grid, compute only the two strips the
+    round actually changed — rows idx (the C live footprints against every
+    write set, (C, K)) and columns idx (every footprint against the C live
+    write sets, (K, C)) — and scatter them over last round's table.
+
+    On TPU both strips come from the rectangular bitset-intersection
+    Pallas kernel (conflict.conflict_matrix_bits_pair): O(C·K·W) device
+    work instead of O(K²·W).  Off-TPU a dense bit-ops fallback with
+    identical verdicts (asserted in tests).  ``foot_bits``/``write_bits``
+    must ALREADY hold the refreshed live rows
+    (:func:`update_packed_footprints_compact`).
+    """
+    k = foot_bits.shape[0]
+    c = idx.shape[0]
+    cfoot = foot_bits[idx]
+    cwrite = write_bits[idx]
+    if _on_tpu():
+        fb = _pad_to(_pad_to(foot_bits, _conf.BI, 0), _conf.BW, 1)
+        wb = _pad_to(_pad_to(write_bits, _conf.BJ, 0), _conf.BW, 1)
+        cf = _pad_to(_pad_to(cfoot, _conf.BI, 0), _conf.BW, 1)
+        cw = _pad_to(_pad_to(cwrite, _conf.BJ, 0), _conf.BW, 1)
+        row_strip = _conf.conflict_matrix_bits_pair(
+            cf, wb, interpret=False)[:c, :k]
+        col_strip = _conf.conflict_matrix_bits_pair(
+            fb, cw, interpret=False)[:k, :c]
+    else:
+        row_strip = ((cfoot[:, None, :] & write_bits[None, :, :]) != 0
+                     ).any(axis=2)
+        col_strip = ((foot_bits[:, None, :] & cwrite[None, :, :]) != 0
+                     ).any(axis=2)
+    from repro.core.txn import scatter_rows
+    new = scatter_rows(old, row_strip, idx, valid)
+    # column twin of scatter_rows: same sentinel-drop contract, axis 1
+    tgt = jnp.where(valid, idx, k)
+    return new.at[:, tgt].set(col_strip, mode="drop")
+
+
 def conflict_matrix_delta(foot_bits: jax.Array, write_bits: jax.Array,
                           old: jax.Array, live: jax.Array,
                           n_objects: int) -> jax.Array:

@@ -1,0 +1,356 @@
+"""Tests for gather-compacted sparse execution + shape-bucketed
+streaming (PR 4).
+
+Four layers of guarantees:
+
+* ``txn.run_live_compact`` — the gather-execute-scatter primitive equals
+  the masked ``run_live`` for every live set that fits the compact
+  width, including live sets of size 0 and 1 (fixed K in {1, 2, 64}
+  plus a hypothesis property);
+* ``protocol.refresh_round_state_compact`` — the compact read phase
+  refreshes the cached results AND the carried conflict table exactly
+  like the masked ``refresh_round_state`` over simulated multi-round
+  shrinking live sets;
+* the engines — ``compact=True`` (ladder cascade) is bit-identical to
+  ``compact=False`` (masked loop) and ``incremental=False`` (rebuild)
+  on stores and traces, at K in {1, 2, 64}, high/low contention, while
+  walking no more device slots than the masked loop;
+* NOP shape bucketing — padded (vacant) rows provably never commit:
+  engine-level padded runs match unpadded runs on fingerprints,
+  versions, gv and real-row commit positions, and the bucketed
+  ``PotSession`` reproduces the exact-shape session bitwise with at
+  most ladder-size compiled steps.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (READ, RMW, WRITE, PotSession, RoundRobinSequencer,
+                        destm_execute, fingerprint, get_engine, make_batch,
+                        make_store, occ_execute, pcc_execute, run_all)
+from repro.core import protocol
+from repro.core import workloads as W
+from repro.core.txn import (gather_live_indices, next_pow2, pad_batch,
+                            run_live, run_live_compact)
+
+RESULT_FIELDS = ("raddrs", "rn", "waddrs", "wvals", "wn")
+
+
+def _wl(k: int, contention: str, seed: int = 0) -> W.Workload:
+    if contention == "low":
+        return W.counters(n_txns=k, n_objects=max(64, 8 * k), n_reads=2,
+                          n_writes=2, n_lanes=min(8, k), skew=0.0, seed=seed)
+    return W.counters(n_txns=k, n_objects=max(4, k // 4), n_reads=2,
+                      n_writes=2, n_lanes=min(8, k), skew=1.0, seed=seed)
+
+
+def _seq_for(wl):
+    seqr = RoundRobinSequencer(n_root_lanes=wl.n_lanes)
+    return jnp.asarray(seqr.order_for(wl.lanes.tolist()), jnp.int32)
+
+
+def _assert_results_equal(a, b, msg=""):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}: field {f} diverged")
+
+
+# ------------------------------------------------- run_live_compact
+@pytest.mark.parametrize("k", [1, 2, 64])
+@pytest.mark.parametrize("n_live", [0, 1, "half", "all"])
+def test_run_live_compact_equals_run_live(k, n_live):
+    wl = _wl(k, "low", seed=k)
+    store = make_store(wl.n_objects, init=np.arange(wl.n_objects) % 7)
+    cache = run_all(wl.batch, store.values)
+    n = {0: 0, 1: min(1, k), "half": k // 2, "all": k}[n_live]
+    rng = np.random.default_rng(k + n)
+    live = np.zeros(k, bool)
+    live[rng.choice(k, n, replace=False)] = True
+    live = jnp.asarray(live)
+    values = store.values + 3   # fresh image: live rows must re-read it
+    ref = run_live(wl.batch, values, live, cache)
+    for width in {max(1, next_pow2(n)), k}:
+        got = run_live_compact(wl.batch, values, live, cache, width)[0]
+        _assert_results_equal(ref, got, f"k={k} n_live={n} width={width}")
+
+
+def test_gather_live_indices_covers_live_rows():
+    live = jnp.asarray([False, True, False, True, True, False])
+    idx, valid = gather_live_indices(live, 4)
+    np.testing.assert_array_equal(np.asarray(idx)[:3], [1, 3, 4])
+    np.testing.assert_array_equal(np.asarray(valid), [True] * 3 + [False])
+
+
+@st.composite
+def compact_cases(draw):
+    n_objects = draw(st.sampled_from([4, 8, 16]))
+    k = draw(st.integers(1, 10))
+    progs = []
+    for _ in range(k):
+        n_ins = draw(st.integers(1, 5))
+        progs.append([
+            (draw(st.sampled_from([READ, WRITE, RMW])),
+             draw(st.integers(0, n_objects - 1)),
+             draw(st.booleans()), draw(st.integers(-3, 3)))
+            for _ in range(n_ins)])
+    live = [draw(st.booleans()) for _ in range(k)]
+    return n_objects, progs, live
+
+
+@settings(max_examples=25, deadline=None)
+@given(compact_cases())
+def test_property_run_live_compact_masks_exactly(case):
+    n_objects, progs, live = case
+    batch = make_batch(progs)
+    store = make_store(n_objects, init=np.arange(n_objects) % 5)
+    live = jnp.asarray(live)
+    width = max(1, next_pow2(int(live.sum())))
+    cache = run_all(batch, store.values)
+    ref = run_live(batch, store.values + 1, live, cache)
+    got = run_live_compact(batch, store.values + 1, live, cache, width)[0]
+    _assert_results_equal(ref, got)
+
+
+# ------------------------------------- compact round-state refresh
+@pytest.mark.parametrize("contention", ["low", "high"])
+def test_refresh_compact_equals_masked_over_rounds(contention):
+    """Simulated engine rounds with a shrinking live set: the compact
+    read phase must refresh the result cache AND the carried conflict
+    table exactly like the masked one (matrix path, dense fallback)."""
+    k = 32
+    wl = _wl(k, contention, seed=41)
+    store = make_store(wl.n_objects)
+    st_m = protocol.init_round_state(wl.batch, store.values, store.versions,
+                                     use_matrix=True)
+    st_c = protocol.init_round_state(wl.batch, store.values, store.versions,
+                                     use_matrix=True)
+    rng = np.random.default_rng(5)
+    live = np.ones(k, bool)
+    for rnd in range(4):
+        jl = jnp.asarray(live)
+        width = max(1, next_pow2(int(live.sum())))
+        st_m = protocol.refresh_round_state(st_m, wl.batch, jl)
+        st_c, _, _, _ = protocol.refresh_round_state_compact(
+            st_c, wl.batch, jl, width)
+        _assert_results_equal(st_m.res, st_c.res, f"round {rnd}")
+        np.testing.assert_array_equal(
+            np.asarray(st_m.conflict), np.asarray(st_c.conflict),
+            err_msg=f"round {rnd}: carried conflict table diverged")
+        assert int(st_m.live_txns) == int(st_c.live_txns)
+        assert int(st_m.live_slots) == int(st_c.live_slots)
+        assert int(st_c.walked_slots) <= int(st_m.walked_slots)
+        bump = st_m.values.at[int(rng.integers(wl.n_objects))].add(1)
+        st_m = protocol.commit_round_state(st_m, bump, st_m.versions)
+        st_c = protocol.commit_round_state(st_c, bump, st_c.versions)
+        live = live & (rng.random(k) < 0.4)
+
+
+def test_compact_ladder_shape():
+    assert protocol.compact_ladder(1) == [1]
+    assert protocol.compact_ladder(8) == [8]
+    assert protocol.compact_ladder(64) == [64, 16]
+    assert protocol.compact_ladder(1024) == [1024, 256, 64, 16]
+    for k in (1, 7, 64, 100, 1000):
+        ladder = protocol.compact_ladder(k)
+        assert ladder[0] == k
+        assert all(a > b for a, b in zip(ladder, ladder[1:]))
+
+
+# ---------------------------------- engines: compact == masked == rebuild
+@pytest.mark.parametrize("k", [1, 2, 64])
+@pytest.mark.parametrize("contention", ["low", "high"])
+def test_engines_compact_equals_masked_equals_rebuild(k, contention):
+    wl = _wl(k, contention, seed=57 + k)
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    lanes = jnp.asarray(wl.lanes, jnp.int32)
+    arrival = jnp.argsort(seq)
+    runs = {
+        "pcc": lambda **kw: pcc_execute(store, wl.batch, seq, **kw),
+        "occ": lambda **kw: occ_execute(store, wl.batch, arrival, **kw),
+        "destm": lambda **kw: destm_execute(store, wl.batch, seq, lanes,
+                                            wl.n_lanes, **kw),
+    }
+    for name, run in runs.items():
+        out_cpt, t_cpt = run()
+        out_msk, t_msk = run(compact=False)
+        out_reb, t_reb = run(incremental=False)
+        for label, out, t in (("masked", out_msk, t_msk),
+                              ("rebuild", out_reb, t_reb)):
+            assert int(fingerprint(out_cpt)) == int(fingerprint(out)), (
+                name, label)
+            np.testing.assert_array_equal(np.asarray(out_cpt.versions),
+                                          np.asarray(out.versions))
+            for f in ("commit_pos", "retries", "commit_round", "rounds",
+                      "exec_ops", "wave_trips", "mode"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(t_cpt, f)),
+                    np.asarray(getattr(t, f)),
+                    err_msg=f"{name} vs {label}: trace field {f!r} diverged")
+        # identical useful work, never more device work than masked
+        assert int(t_cpt.live_txns) == int(t_msk.live_txns), name
+        assert int(t_cpt.live_slots) == int(t_msk.live_slots), name
+        assert int(t_cpt.walked_slots) <= int(t_msk.walked_slots), name
+
+
+def test_compact_walks_fewer_slots_on_sparse_tail():
+    """The sparse-tail regime the cascade targets: most of the batch
+    settles in round 0, a tiny straggler chain keeps the loop alive for
+    several more rounds.  Those tail rounds must run at the ladder's
+    narrow rung (16 for K=64), not the full K — walked slots stay within
+    one full-width round plus narrow tail rounds."""
+    k, chain = 64, 6
+    # k - chain disjoint txns + a serial RMW chain on one hot address,
+    # sequenced last: the chain commits one per round after round 0
+    progs = [[(RMW, 1 + i, False, 1)] for i in range(k - chain)]
+    progs += [[(RMW, 0, False, 1)] for _ in range(chain)]
+    batch = make_batch(progs)
+    store = make_store(k + 1)
+    seq = jnp.arange(1, k + 1, dtype=jnp.int32)
+    for fn, order in ((pcc_execute, seq),
+                      (occ_execute, jnp.arange(k, dtype=jnp.int32))):
+        _, t_cpt = fn(store, batch, order)
+        _, t_msk = fn(store, batch, order, compact=False)
+        rounds = int(t_cpt.rounds)
+        assert rounds == int(t_msk.rounds) > 2
+        narrow = protocol.compact_ladder(k)[-1]
+        length = batch.max_ins
+        assert int(t_msk.walked_slots) == rounds * k * length
+        assert int(t_cpt.walked_slots) <= \
+            (k + (rounds - 1) * narrow) * length
+        assert int(t_cpt.walked_slots) <= int(t_msk.walked_slots) // 2
+
+
+def test_destm_compact_walks_n_lanes_only():
+    wl = _wl(32, "low", seed=3)
+    store = make_store(wl.n_objects)
+    lanes = jnp.asarray(wl.lanes, jnp.int32)
+    _, t = destm_execute(store, wl.batch, _seq_for(wl), lanes, wl.n_lanes)
+    assert int(t.walked_slots) == \
+        int(t.rounds) * wl.n_lanes * wl.batch.max_ins
+
+
+# ------------------------------------------------ NOP shape bucketing
+@pytest.mark.parametrize("engine", ["pcc", "occ", "destm", "pogl"])
+def test_padded_rows_never_commit(engine):
+    """Engine-level: a batch padded with vacant NOP rows (sequence
+    numbers past every real row) produces the same store image, version
+    stamps, gv and real-row commit positions as the unpadded batch, and
+    the padded rows never commit (commit_pos == -1)."""
+    k, bk, bl = 11, 16, 8
+    wl = W.counters(n_txns=k, n_objects=32, n_reads=2, n_writes=2,
+                    n_lanes=4, skew=0.9, seed=13)
+    store = make_store(wl.n_objects)
+    seq = np.asarray(RoundRobinSequencer(n_root_lanes=4).order_for(
+        wl.lanes.tolist()))
+    lanes = np.asarray(wl.lanes)
+    padded = pad_batch(wl.batch, bk, bl)
+    assert padded.opcodes.shape == (bk, bl)
+    pseq = np.concatenate([seq, seq.max() + 1 + np.arange(bk - k)])
+    planes = np.concatenate([lanes, np.zeros(bk - k, lanes.dtype)])
+    eng = get_engine(engine)
+    out, trace = eng.execute(store, wl.batch, seq, lanes=lanes, n_lanes=4)
+    pout, ptrace = eng.execute(store, padded, pseq, lanes=planes, n_lanes=4)
+    assert int(fingerprint(out)) == int(fingerprint(pout))
+    np.testing.assert_array_equal(np.asarray(out.versions),
+                                  np.asarray(pout.versions))
+    assert int(out.gv) == int(pout.gv) == k
+    cp, pcp = np.asarray(trace.commit_pos), np.asarray(ptrace.commit_pos)
+    np.testing.assert_array_equal(cp, pcp[:k])
+    assert (pcp[k:] == -1).all()                 # vacant rows never commit
+    assert sorted(pcp[:k].tolist()) == list(range(k))
+
+
+def test_pad_batch_validates_and_noops():
+    batch = make_batch([[(RMW, 0, False, 1)]])
+    assert pad_batch(batch, 1, 1) is batch
+    with pytest.raises(ValueError, match="smaller"):
+        pad_batch(batch, 0, 1)
+
+
+@pytest.mark.parametrize("engine", ["pcc", "occ", "destm", "pogl"])
+def test_session_bucketed_stream_matches_exact(engine):
+    """A ragged stream through the bucketed session is bitwise identical
+    to the exact-shape session: fingerprints, replay logs, gv — and the
+    returned traces are sliced back to each batch's real K."""
+    rng = np.random.default_rng(19)
+    batches, lanes = [], []
+    for i in range(8):
+        kk = int(rng.integers(1, 30))
+        wl = W.counters(n_txns=kk, n_objects=64, n_reads=2, n_writes=2,
+                        n_lanes=4, skew=0.7, seed=300 + i)
+        batches.append(wl.batch)
+        lanes.append(wl.lanes.tolist())
+    a = PotSession(64, engine=engine, n_lanes=4)
+    b = PotSession(64, engine=engine, n_lanes=4, bucket=False)
+    traces = a.run_stream(batches, lanes)
+    b.run_stream(batches, lanes)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.replay_log() == b.replay_log()
+    assert a.gv == b.gv == sum(x.n_txns for x in batches)
+    for trace, batch in zip(traces, batches):
+        assert trace.n_txns == batch.n_txns
+        cp = np.asarray(trace.commit_pos)
+        assert sorted(cp.tolist()) == list(range(batch.n_txns))
+    # pow2 buckets: strictly fewer compiled steps than distinct shapes
+    distinct = len({(x.n_txns, x.max_ins) for x in batches})
+    assert a.compile_count() <= distinct
+    assert a.compile_count() == len(a.bucket_counts())
+    assert sum(a.bucket_counts().values()) == len(batches)
+    for (bk, bl), _ in a.bucket_counts().items():
+        assert bk == next_pow2(bk) and bl == next_pow2(bl)
+
+
+def test_bucketed_replay_roundtrip():
+    """Record under bucketing, replay under bucketing: the replayed
+    session must reproduce the store exactly even though vacant padding
+    rows sit in every padded trace."""
+    rng = np.random.default_rng(29)
+    batches = []
+    for i in range(5):
+        kk = int(rng.integers(2, 20))
+        batches.append(W.counters(n_txns=kk, n_objects=32, n_lanes=2,
+                                  skew=0.8, seed=i).batch)
+    occ = PotSession(32, engine="occ", n_lanes=2)
+    occ.run_stream(batches)
+    replay = PotSession(32, engine="pcc",
+                        sequencer=occ.replay_sequencer())
+    replay.run_stream(batches)
+    np.testing.assert_array_equal(np.asarray(replay.store.values),
+                                  np.asarray(occ.store.values))
+    assert replay.fingerprint() == occ.fingerprint()
+
+
+def test_truncated_run_commit_pos_contract():
+    """Rows a max_rounds cap left uncommitted are not part of the
+    history: commit_pos == -1 (the same contract vacant rows follow), so
+    replay_log's `cp >= 0` filter is exact even for truncated runs."""
+    k = 8
+    batch = make_batch([[(RMW, 0, False, 1)] for _ in range(k)])
+    store = make_store(4)
+    seq = jnp.arange(1, k + 1, dtype=jnp.int32)
+    _, t = pcc_execute(store, batch, seq, max_rounds=2)
+    _, td = destm_execute(store, batch, seq, jnp.zeros((k,), jnp.int32), 2,
+                          max_rounds=2)
+    for trace in (t, td):
+        cp = np.asarray(trace.commit_pos)
+        uncommitted = np.asarray(trace.commit_round) < 0
+        assert uncommitted.any()            # the cap actually truncated
+        assert (cp[uncommitted] == -1).all()
+        done = cp[~uncommitted]
+        assert sorted(done.tolist()) == list(range(len(done)))
+
+
+def test_session_live_counts_unaffected_by_bucketing():
+    wl = W.counters(n_txns=12, n_objects=16, n_lanes=4, skew=1.0, seed=8)
+    s = PotSession(16, engine="pcc", n_lanes=4)
+    s.submit(wl.batch, wl.lanes.tolist())
+    lc = s.live_counts()[0]
+    assert lc[0] == 12          # round 0: the real rows, not the bucket

@@ -171,6 +171,73 @@ def test_conflict_matrix_delta_kernel_vs_full(live_frac):
     np.testing.assert_array_equal(got, exp)
 
 
+def test_conflict_matrix_pair_kernel_rectangular():
+    """The rectangular pair kernel (the compacted delta's strip primitive)
+    over different row sets == the pure-jnp reference."""
+    rng = np.random.default_rng(21)
+    m, n = 2 * conflict_mod.BI, conflict_mod.BJ
+    w = 2 * conflict_mod.BW
+    mk = lambda rows, d: jnp.asarray(
+        (rng.random((rows, w)) < d) * rng.integers(0, 2**31, (rows, w)),
+        jnp.int32)
+    foot = mk(m, 0.2)
+    write = mk(n, 0.05)
+    out = np.asarray(conflict_mod.conflict_matrix_bits_pair(
+        foot, write, interpret=True))
+    exp = ((np.asarray(foot)[:, None, :]
+            & np.asarray(write)[None, :, :]) != 0).any(axis=2)
+    assert out.shape == (m, n)
+    np.testing.assert_array_equal(out, exp)
+
+
+def test_conflict_matrix_delta_compact_vs_masked_delta():
+    """The compacted strip-scatter delta == the masked-row delta for a
+    gathered live set (both backend paths share this op-level contract;
+    off-TPU this exercises the dense strips)."""
+    from repro.core.txn import gather_live_indices
+    rng = np.random.default_rng(31)
+    k, l, n_objects = 19, 4, 80
+    mk = lambda: (jnp.asarray(rng.integers(0, n_objects, (k, l)), jnp.int32),
+                  jnp.asarray(rng.integers(0, l + 1, (k,)), jnp.int32))
+    ra, rn = mk()
+    wa, wn = mk()
+    foot, write = ops.packed_footprints(ra, rn, wa, wn, n_objects)
+    old = jnp.asarray(rng.random((k, k)) < 0.2)
+    for n_live in (0, 1, 7, k):
+        live = np.zeros(k, bool)
+        live[rng.choice(k, n_live, replace=False)] = True
+        live = jnp.asarray(live)
+        idx, valid = gather_live_indices(live, max(1, int(n_live)))
+        ref = np.asarray(ops.conflict_matrix_delta(foot, write, old, live,
+                                                   n_objects))
+        got = np.asarray(ops.conflict_matrix_delta_compact(
+            foot, write, old, idx, valid, n_objects))
+        np.testing.assert_array_equal(got, ref, err_msg=f"n_live={n_live}")
+
+
+def test_update_packed_footprints_compact_matches_masked():
+    from repro.core.txn import gather_live_indices
+    rng = np.random.default_rng(44)
+    k, l, n_objects = 14, 5, 90
+    mk = lambda: (jnp.asarray(rng.integers(0, n_objects, (k, l)), jnp.int32),
+                  jnp.asarray(rng.integers(0, l + 1, (k,)), jnp.int32))
+    ra0, rn0 = mk()
+    wa0, wn0 = mk()
+    foot0, write0 = ops.packed_footprints(ra0, rn0, wa0, wn0, n_objects)
+    ra1, rn1 = mk()
+    wa1, wn1 = mk()
+    live = jnp.asarray(rng.random(k) < 0.4)
+    width = max(1, int(live.sum()))
+    idx, valid = gather_live_indices(live, width)
+    ref = ops.update_packed_footprints(foot0, write0, ra1, rn1, wa1, wn1,
+                                       live, n_objects)
+    got = ops.update_packed_footprints_compact(
+        foot0, write0, ra1[idx], rn1[idx], wa1[idx], wn1[idx], idx, valid,
+        n_objects)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
 def test_update_packed_footprints_refreshes_live_rows_only():
     rng = np.random.default_rng(8)
     k, l, n_objects = 12, 5, 100
