@@ -36,6 +36,21 @@ Two PR 4 sections ride along:
   stream through PotSession with and without shape bucketing —
   compile_count() must stay <= the bucket-ladder size when bucketing.
 
+One PR 5 section:
+
+* shard sweep (axis="shards"): every engine's compact cascade on a
+  store partitioned into S in {1, 4, 8} contiguous range shards
+  (per-shard conflict tables OR-reduced in rank space + S independent
+  write-back scatters), asserted bit-identical to the dense S=1 run,
+  plus the write-back PRIMITIVE (``protocol.fused_write_back``) timed
+  per S on one full committing round.
+
+``--shard-smoke`` (scripts/ci.sh --shard-smoke): asserts sharded ==
+dense store fingerprints and traces across engines at S in {1, 2, 8},
+and — when the host exposes multiple devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) — the shard_map
+per-device write-back path on a real mesh.
+
 ``--smoke`` (scripts/ci.sh --bench-smoke): tiny K, asserts the four
 implementations' store fingerprints and commit positions are bitwise
 identical, and exercises the conflict-kernel delta path (skipped with a
@@ -245,6 +260,7 @@ def run_bench(ks, contentions, iters: int) -> dict:
                     axis="lane_count")
     live_fraction_sweep(iters, results)
     ragged_stream_bench(results)
+    shard_sweep(iters, results)
     return dict(results=results)
 
 
@@ -350,6 +366,66 @@ def ragged_stream_bench(results: list, n_shapes: int = 32) -> None:
         # bucket ladder over K in [1, 128] has 8 pow2 rungs — the compile
         # count must stay within it no matter how ragged the stream is
         assert sb.compile_count() <= 8, (engine, sb.compile_count())
+
+
+def shard_sweep(iters: int, results: list, k: int = 256,
+                shard_counts=(1, 4, 8)) -> None:
+    """PR 5 shards axis: every engine's compact cascade on a store
+    partitioned into S contiguous range shards, asserted bit-identical
+    to the dense S=1 run, plus per-shard write-back timing of the
+    ``fused_write_back`` primitive on one full committing round (the
+    stage that splits into S independent scatters — one per device
+    under a mesh)."""
+    from repro.core import protocol
+    from repro.core.txn import run_all
+
+    for cont in ("low", "med"):
+        wl = _workload(k, cont, seed=29)
+        seq = _seq_for(wl)
+        arrival = jnp.argsort(seq)
+        lanes = jnp.asarray(wl.lanes, jnp.int32)
+        # shard-invariant write-back operands: one full committing round
+        res = run_all(wl.batch, make_store(wl.n_objects).values)
+        rank = jnp.arange(k, dtype=jnp.int32)
+        committing = jnp.ones((k,), bool)
+        baseline = {}
+        for shards in shard_counts:
+            store = make_store(wl.n_objects, shards=shards)
+            runners = {
+                "pcc": lambda: pcc_execute(store, wl.batch, seq),
+                "occ": lambda: occ_execute(store, wl.batch, arrival),
+                "destm": lambda: destm_execute(store, wl.batch, seq,
+                                               lanes, wl.n_lanes),
+            }
+            for engine, fn in runners.items():
+                secs = timeit(fn, warmup=2, iters=iters)
+                out, trace = fn()
+                if shards == 1:
+                    baseline[engine] = (out, trace)
+                else:
+                    _assert_equal(engine, k, cont, *baseline[engine],
+                                  out, trace, pair=("s1", f"s{shards}"))
+                results.append(_row(engine, wl, "compact", secs, trace,
+                                    axis="shards", contention=cont,
+                                    shards=shards))
+                print(f"{engine:6s} K={k:<5d} {cont:4s} S={shards} "
+                      f"compact     {secs * 1e3:9.2f} ms  "
+                      f"{k / secs:12.1f} txn/s")
+            # write-back primitive at this S
+            layout = store.layout
+            wb = jax.jit(lambda v, ver: protocol.fused_write_back(
+                v, ver, res.waddrs, res.wvals, res.wn, committing, rank,
+                rank + 1, layout))
+            secs = timeit(lambda: wb(store.values, store.versions),
+                          warmup=2, iters=iters)
+            results.append(dict(
+                engine="fused_write_back", k=k, impl=f"s{shards}",
+                axis="shards", L=wl.batch.max_ins, slot=1,
+                n_lanes=wl.n_lanes, contention=cont, shards=shards,
+                seconds=round(secs, 6),
+                writes_per_sec=round(float(res.wn.sum()) / secs, 1)))
+            print(f"write_back K={k} {cont:4s} S={shards}  "
+                  f"{secs * 1e6:9.1f} us")
 
 
 def summarize(results) -> dict:
@@ -499,10 +575,82 @@ def run_compact_smoke() -> None:
           "run_live_compact == run_live (live in {0, 1, 5, 64})")
 
 
+def run_shard_smoke() -> None:
+    """CI gate (scripts/ci.sh --shard-smoke): the sharded store ==
+    the dense store, bit for bit, across engines and both code paths —
+    store fingerprints, commit positions and retries at S in {1, 2, 8},
+    K in {2, 8, 64}, low/med contention, compact cascade AND masked
+    loop.  When the host exposes >= 2 devices (the CI stage sets
+    XLA_FLAGS=--xla_force_host_platform_device_count=8), the per-shard
+    write-back additionally runs one-shard-per-device under
+    jax.shard_map on a real mesh and must stay bit-identical."""
+    from repro.core import shard_store
+
+    for k in (2, 8, 64):
+        for cont in ("low", "med"):
+            wl = _workload(k, cont, seed=11 * k + 3)
+            seq = _seq_for(wl)
+            arrival = jnp.argsort(seq)
+            lanes = jnp.asarray(wl.lanes, jnp.int32)
+            dense = make_store(wl.n_objects)
+            runners = lambda store: {
+                "pcc": {
+                    "compact": lambda: pcc_execute(store, wl.batch, seq),
+                    "masked": lambda: pcc_execute(store, wl.batch, seq,
+                                                  compact=False),
+                },
+                "occ": {
+                    "compact": lambda: occ_execute(store, wl.batch,
+                                                   arrival),
+                    "masked": lambda: occ_execute(store, wl.batch,
+                                                  arrival, compact=False),
+                },
+                "destm": {
+                    "compact": lambda: destm_execute(
+                        store, wl.batch, seq, lanes, wl.n_lanes),
+                    "masked": lambda: destm_execute(
+                        store, wl.batch, seq, lanes, wl.n_lanes,
+                        compact=False),
+                },
+            }
+            base = {(e, i): fn() for e, impls in runners(dense).items()
+                    for i, fn in impls.items()}
+            for shards in (2, 8):
+                sharded = runners(shard_store(dense, shards))
+                for engine, impls in sharded.items():
+                    for impl, fn in impls.items():
+                        _assert_equal(engine, k, cont,
+                                      *base[(engine, impl)], *fn(),
+                                      pair=(f"dense/{impl}",
+                                            f"s{shards}/{impl}"))
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        s = min(8, n_dev)
+        mesh = jax.make_mesh((s,), ("shard",), devices=jax.devices()[:s])
+        wl = _workload(32, "med", seed=19)
+        seq = _seq_for(wl)
+        dense = make_store(wl.n_objects)
+        out_d, tr_d = pcc_execute(dense, wl.batch, seq)
+        out_m, tr_m = pcc_execute(shard_store(dense, s, mesh=mesh),
+                                  wl.batch, seq)
+        _assert_equal("pcc", 32, "med", out_d, tr_d, out_m, tr_m,
+                      pair=("dense", f"mesh_s{s}"))
+        mesh_msg = (f"shard_map write-back validated on a {s}-device "
+                    f"mesh")
+    else:
+        mesh_msg = ("single-device host: shard_map mesh path SKIPPED "
+                    "(run under XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    print("shard-smoke OK: sharded == dense (engines: pcc, occ, destm; "
+          "S in {2, 8}; K in {2, 8, 64}; low/med contention; compact + "
+          f"masked paths); {mesh_msg}")
+
+
 def run() -> None:
     """benchmarks/run.py entry point: one incremental-vs-rebuild-vs-
-    compact row per engine at K=256 low contention, plus a ragged-stream
-    compile-count row (CSV: name,us_per_call,derived)."""
+    compact row per engine at K=256 low contention, a shards row
+    (sharded-vs-dense step time + write-back split), plus a
+    ragged-stream compile-count row (CSV: name,us_per_call,derived)."""
     from benchmarks.common import emit
     from repro.core import PotSession
     wl = _workload(256, "low")
@@ -518,6 +666,21 @@ def run() -> None:
              f"live_txns={int(trace.live_txns)};"
              f"walked_slots={int(trace.walked_slots)};"
              f"rounds={int(trace.rounds)}")
+    # sharded store: step time at S=8 vs dense (must stay bit-identical;
+    # the interesting number on CPU is the overhead of the OR-reduce,
+    # on a real mesh the per-device write-back win)
+    seq = _seq_for(wl)
+    dense = make_store(wl.n_objects)
+    sharded = make_store(wl.n_objects, shards=8)
+    t_d = timeit(lambda: pcc_execute(dense, wl.batch, seq), warmup=1,
+                 iters=3)
+    t_s = timeit(lambda: pcc_execute(sharded, wl.batch, seq), warmup=1,
+                 iters=3)
+    out_d, _ = pcc_execute(dense, wl.batch, seq)
+    out_s, _ = pcc_execute(sharded, wl.batch, seq)
+    assert int(fingerprint(out_d)) == int(fingerprint(out_s))
+    emit("engine_bench_pcc_k256_low_shards8", t_s * 1e6,
+         f"dense_over_sharded={t_d / t_s:.2f}x;bitwise_equal=1")
     # ragged-stream compile counts: 8 shapes is enough for a CSV row
     rng = np.random.default_rng(3)
     batches = []
@@ -544,6 +707,10 @@ def main() -> None:
     ap.add_argument("--compact-smoke", action="store_true",
                     help="assert compact == masked == rebuild across "
                          "engines (+ primitive equality)")
+    ap.add_argument("--shard-smoke", action="store_true",
+                    help="assert sharded store == dense store across "
+                         "engines and paths (+ shard_map mesh when "
+                         "multiple devices are exposed)")
     ap.add_argument(
         "--out",
         default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -559,6 +726,9 @@ def main() -> None:
         return
     if args.compact_smoke:
         run_compact_smoke()
+        return
+    if args.shard_smoke:
+        run_shard_smoke()
         return
 
     ks = (64, 256, 1024)
@@ -581,7 +751,13 @@ def main() -> None:
              "cascade is what turns the sparse-tail slot win into "
              "wall-clock (see axis=live_fraction for the primitive).  "
              "axis=ragged_stream: PotSession shape bucketing, compile "
-             "counts bucketed vs exact.",
+             "counts bucketed vs exact.  axis=shards: the store "
+             "partitioned into S contiguous range shards (per-shard "
+             "conflict tables OR-reduced + S independent write-back "
+             "scatters, decisions in rank space) — bit-identical to "
+             "S=1 by assertion; fused_write_back rows time the "
+             "primitive that runs one-scatter-per-device under a "
+             "shard_map mesh.",
         commit_steps_model="scan: K sequential device steps per round; "
                            "rebuild/incremental: ceil(log2 K) + 3 batched "
                            "stages (PCC/DeSTM; OCC: conflict-chain depth, "

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
 # the test suite: it executes every engine through the preserved legacy
@@ -19,6 +19,12 @@
 # plus run_live_compact == run_live at the primitive level (the
 # compacted-execution equivalence gate).
 #
+# --shard-smoke runs benchmarks/engine_bench.py --shard-smoke under an
+# 8-device host-platform mesh (XLA_FLAGS): the PR5 sharded store ==
+# the dense store bitwise across engines and both code paths, including
+# the per-shard write-back running one-shard-per-device via shard_map
+# (the shard-decomposition equivalence gate).
+#
 # Stages do NOT short-circuit each other: every requested stage runs and
 # the script exits non-zero if ANY stage failed (the last failing stage's
 # exit code is propagated).
@@ -29,12 +35,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_SMOKE=0
 INCREMENTAL_SMOKE=0
 COMPACT_SMOKE=0
+SHARD_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
   case "$arg" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --incremental-smoke) INCREMENTAL_SMOKE=1 ;;
     --compact-smoke) COMPACT_SMOKE=1 ;;
+    --shard-smoke) SHARD_SMOKE=1 ;;
     *) PYTEST_ARGS+=("$arg") ;;
   esac
 done
@@ -64,6 +72,14 @@ fi
 
 if [[ "$COMPACT_SMOKE" == "1" ]]; then
   run_stage compact-smoke python benchmarks/engine_bench.py --compact-smoke
+fi
+
+if [[ "$SHARD_SMOKE" == "1" ]]; then
+  # run the equivalence suite on a real multi-device mesh: 8 host-platform
+  # CPU devices, so the shard_map per-device write-back path is exercised
+  run_stage shard-smoke env \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python benchmarks/engine_bench.py --shard-smoke
 fi
 
 exit "$FAIL"

@@ -54,7 +54,9 @@ from repro.core.pogl import pogl_execute
 from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
                                   RoundRobinSequencer, seq_to_order)
 from repro.core.session import PotSession
-from repro.core.tstore import TStore, fingerprint, make_store
+from repro.core.tstore import (DenseStore, ShardedStore, StoreLayout, TStore,
+                               dense_image, fingerprint, make_store,
+                               shard_store, unshard_store)
 from repro.core.txn import (NOP, READ, RMW, WRITE, TxnBatch, TxnResult,
                             make_batch, next_pow2, pad_batch, run_all,
                             run_live, run_live_compact, run_txn)
@@ -64,8 +66,9 @@ __all__ = [
     "PotSession", "ExecTrace", "Engine", "EngineDef", "ENGINES",
     "get_engine", "make_trace",
     "MODE_UNSET", "MODE_FAST", "MODE_PREFIX", "MODE_SPEC",
-    # store + transactions
-    "TStore", "make_store", "fingerprint",
+    # store + transactions (dense and shard-partitioned layouts)
+    "TStore", "DenseStore", "ShardedStore", "StoreLayout", "make_store",
+    "shard_store", "unshard_store", "dense_image", "fingerprint",
     "TxnBatch", "TxnResult", "make_batch", "run_all", "run_live",
     "run_live_compact", "run_txn", "pad_batch", "next_pow2",
     "NOP", "READ", "WRITE", "RMW",

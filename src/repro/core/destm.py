@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from repro.core import protocol
 from repro.core.engine import (EngineDef, ExecTrace, make_trace,
                                rank_from_order, register_engine, seq_rank)
-from repro.core.tstore import TStore
+from repro.core.tstore import TStore, flat_values, store_with
 from repro.core.txn import TxnBatch, TxnResult, run_live
 
 # The old per-engine trace dataclass is now the canonical schema.
@@ -86,7 +86,8 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     advance (their sequence numbers must sort after every real row's).
     """
     k = batch.n_txns
-    n_obj = store.n_objects
+    layout = store.layout     # static: dense or S contiguous range shards
+    n_obj = layout.n_objects
     order = jnp.argsort(seq)
     rank = rank_from_order(order)
     gv0 = store.gv
@@ -118,12 +119,12 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         if incremental and compact:
             live_t = sel_t
             rs, cres = protocol.refresh_round_state_gathered(
-                rs, batch, sel_txn, live)
+                rs, batch, sel_txn, live, layout)
             ra_c, rn_c = cres.raddrs, cres.rn
             wa_c, wv_c, wn_c = cres.waddrs, cres.wvals, cres.wn
         else:
             live_t = sel_t if incremental else jnp.ones((k,), bool)
-            rs = protocol.refresh_round_state(rs, batch, live_t)
+            rs = protocol.refresh_round_state(rs, batch, live_t, layout)
             res = rs.res
             ra_c, rn_c = res.raddrs[sel_txn], res.rn[sel_txn]
             wa_c, wv_c, wn_c = (res.waddrs[sel_txn], res.wvals[sel_txn],
@@ -157,7 +158,8 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             f = jnp.min(jnp.where(bad, lane_slot, n_lanes))  # retry event
             clean = remaining & (lane_slot < f)
             values, versions = protocol.fused_write_back(
-                values, versions, wa_c, wv_c, wn_c, clean, lane_slot, sn_c)
+                values, versions, wa_c, wv_c, wn_c, clean, lane_slot, sn_c,
+                layout)
             slot = jnp.arange(wa_c.shape[1])
             clean_slots = clean[:, None] & (slot[None, :] < wn_c[:, None])
             written = written.at[
@@ -176,13 +178,13 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                 # would hide conflicts from later round members.
                 values, versions, written = args
                 fc = jnp.clip(f, 0, n_lanes - 1)
-                cres = run_live(compact_batch, values, lane_slot == fc,
-                                compact_res)
+                cres = run_live(compact_batch, flat_values(values, layout),
+                                lane_slot == fc, compact_res, n_obj)
                 waddrs2, wvals2, wn2 = (cres.waddrs[fc], cres.wvals[fc],
                                         cres.wn[fc])
                 values, versions = protocol.apply_writes(
                     values, versions, waddrs2, wvals2, wn2,
-                    gv0 + sel_pos[fc] + 1)
+                    gv0 + sel_pos[fc] + 1, layout)
                 written = protocol.mark_writes(written, waddrs2, wn2)
                 return values, versions, written
 
@@ -235,7 +237,7 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                barrier_ops=jnp.zeros((), jnp.int32),
                live_per_round=jnp.full((limit,), -1, jnp.int32))
     rs0 = protocol.init_round_state(batch, store.values, store.versions,
-                                    track_conflict=False)
+                                    track_conflict=False, layout=layout)
     rs, done, rnd, tr = jax.lax.while_loop(
         cond, round_body,
         (rs0, ~real, jnp.zeros((), jnp.int32), tr0))
@@ -263,8 +265,7 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         live_per_round=tr["live_per_round"],
         # a txn executes only in its commit round
         first_round=tr["commit_round"], commit_pos=commit_pos)
-    return TStore(values=values, versions=versions,
-                  gv=store.gv + n_real), trace
+    return store_with(store, values, versions, store.gv + n_real), trace
 
 
 destm_execute = jax.jit(

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import protocol
 from repro.core.engine import (EngineDef, ExecTrace, make_trace,
                                rank_from_order, register_engine)
-from repro.core.tstore import TStore
+from repro.core.tstore import TStore, store_with
 from repro.core.txn import TxnBatch
 
 # The old per-engine trace dataclass is now the canonical schema.
@@ -56,7 +56,8 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
     must sort after every real row's).
     """
     k = batch.n_txns
-    n_obj = store.n_objects
+    layout = store.layout     # static: dense or S contiguous range shards
+    n_obj = layout.n_objects
     # arrival rank of each txn: one argsort's inverse, computed once
     rank = rank_from_order(arrival)
     real = batch.n_ins > 0     # vacant rows (bucket padding) never commit
@@ -72,10 +73,10 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
             pending_t = ~done
             live = pending_t if incremental else jnp.ones((k,), bool)
             if full:
-                rs = protocol.refresh_round_state(rs, batch, live)
+                rs = protocol.refresh_round_state(rs, batch, live, layout)
             else:
                 rs, _, _, _ = protocol.refresh_round_state_compact(
-                    rs, batch, live, width)
+                    rs, batch, live, width, layout)
             res = rs.res
 
             # --- greedy wave fixpoint (trip count = conflict-chain depth)
@@ -88,7 +89,7 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
             commit_idx_t = n_comm + jnp.cumsum(committing_t[arrival])[rank] - 1
             values, versions = protocol.fused_write_back(
                 rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
-                committing_t, rank, commit_idx_t + 1)
+                committing_t, rank, commit_idx_t + 1, layout)
 
             commit_pos = jnp.maximum(
                 tr["commit_pos"],
@@ -125,7 +126,8 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
                exec_ops=jnp.zeros((), jnp.int32),
                wave_trips=jnp.zeros((), jnp.int32),
                live_per_round=jnp.full((limit,), -1, jnp.int32))
-    rs0 = protocol.init_round_state(batch, store.values, store.versions)
+    rs0 = protocol.init_round_state(batch, store.values, store.versions,
+                                    layout=layout)
     ladder = (protocol.compact_ladder(k) if (incremental and compact)
               else [k])
     state = (rs0, ~real, jnp.zeros((), jnp.int32),
@@ -144,8 +146,8 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
         live_per_round=tr["live_per_round"],
         # a txn that retried r waves committed in wave r (vacant: none)
         commit_round=jnp.where(real, tr["retries"], -1))
-    return TStore(values=rs.values, versions=rs.versions,
-                  gv=store.gv + n_comm), trace
+    return store_with(store, rs.values, rs.versions,
+                      store.gv + n_comm), trace
 
 
 occ_execute = jax.jit(

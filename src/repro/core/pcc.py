@@ -67,7 +67,7 @@ from repro.core import protocol
 from repro.core.engine import (MODE_FAST, MODE_PREFIX, MODE_SPEC, MODE_UNSET,
                                EngineDef, ExecTrace, make_trace,
                                rank_from_order, register_engine)
-from repro.core.tstore import TStore
+from repro.core.tstore import TStore, flat_values, store_with
 from repro.core.txn import TxnBatch, TxnResult, run_txn
 
 # The old per-engine trace dataclass is now the canonical schema.
@@ -118,7 +118,8 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
       number of real (non-vacant) transactions.
     """
     k = batch.n_txns
-    n_obj = store.n_objects
+    layout = store.layout     # static: dense or S contiguous range shards
+    n_obj = layout.n_objects
     order = jnp.argsort(seq)  # order[p] = txn index at seq position p
     rank = rank_from_order(order)
     gv0 = store.gv
@@ -137,10 +138,10 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             pending_t = real & (rank >= n_comm)
             live = pending_t if incremental else jnp.ones((k,), bool)
             if full:
-                rs = protocol.refresh_round_state(rs, batch, live)
+                rs = protocol.refresh_round_state(rs, batch, live, layout)
             else:
                 rs, _, _, _ = protocol.refresh_round_state_compact(
-                    rs, batch, live, width)
+                    rs, batch, live, width, layout)
             res: TxnResult = rs.res
 
             # --- carried conflict analysis + prefix fixpoint (txn space) -
@@ -150,7 +151,7 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             # --- fused write-back: the whole prefix in one scatter -------
             values, versions = protocol.fused_write_back(
                 rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
-                committing_t, rank, seq_nos)
+                committing_t, rank, seq_nos, layout)
 
             n_new = committing_t.sum(dtype=jnp.int32)
             gv = gv + n_new
@@ -167,11 +168,12 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                     values, versions, gv = args
                     t = order[jnp.clip(head_pos, 0, k - 1)]
                     row = jax.tree.map(lambda a: a[t], batch)
-                    raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(row, values)
+                    raddrs2, rn2, waddrs2, wvals2, wn2 = run_txn(
+                        row, flat_values(values, layout), n_obj)
                     del raddrs2, rn2
                     values, versions = protocol.apply_writes(
                         values, versions, waddrs2, wvals2, wn2,
-                        gv0 + head_pos + 1)
+                        gv0 + head_pos + 1, layout)
                     return values, versions, gv + 1
 
                 do_promote = head_pos < n_real
@@ -243,7 +245,8 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         promotions=jnp.zeros((), jnp.int32),
         live_per_round=jnp.full((limit,), -1, jnp.int32),
     )
-    rs0 = protocol.init_round_state(batch, store.values, store.versions)
+    rs0 = protocol.init_round_state(batch, store.values, store.versions,
+                                    layout=layout)
     ladder = (protocol.compact_ladder(k) if (incremental and compact)
               else [k])
     state = (rs0, store.gv, jnp.zeros((), jnp.int32),
@@ -267,7 +270,7 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         # Vacant rows and rows a max_rounds cap left uncommitted
         # (commit_round < 0) are not part of the history: commit_pos -1
         commit_pos=jnp.where(real & (tr["commit_round"] >= 0), rank, -1))
-    return TStore(values=rs.values, versions=rs.versions, gv=gv), trace
+    return store_with(store, rs.values, rs.versions, gv), trace
 
 
 pcc_execute = jax.jit(

@@ -15,27 +15,29 @@ import jax.numpy as jnp
 from repro.core import protocol
 from repro.core.engine import (MODE_FAST, EngineDef, make_trace,
                                rank_from_order, register_engine)
-from repro.core.tstore import TStore
+from repro.core.tstore import TStore, flat_values, store_with
 from repro.core.txn import TxnBatch, run_txn
 
 
 def _pogl_ordered(store: TStore, batch: TxnBatch, order: jax.Array) -> TStore:
     k = batch.n_txns
     gv0 = store.gv
+    layout = store.layout     # static: dense or S contiguous range shards
 
     def step(carry, p):
         values, versions = carry
         t = order[p]
         row = jax.tree.map(lambda a: a[t], batch)
-        raddrs, rn, waddrs, wvals, wn = run_txn(row, values)
+        raddrs, rn, waddrs, wvals, wn = run_txn(
+            row, flat_values(values, layout), layout.n_objects)
         del raddrs, rn
         values, versions = protocol.apply_writes(
-            values, versions, waddrs, wvals, wn, gv0 + p + 1)
+            values, versions, waddrs, wvals, wn, gv0 + p + 1, layout)
         return (values, versions), None
 
     (values, versions), _ = jax.lax.scan(
         step, (store.values, store.versions), jnp.arange(k))
-    return TStore(values=values, versions=versions, gv=store.gv + k)
+    return store_with(store, values, versions, store.gv + k)
 
 
 @jax.jit
@@ -62,8 +64,7 @@ def _pogl_raw(store, batch, seq, lanes, n_lanes):
         rounds=n_real,
         exec_ops=batch.n_ins.sum(dtype=jnp.int32))
     out = _pogl_ordered(store, batch, order)
-    out = TStore(values=out.values, versions=out.versions,
-                 gv=store.gv + n_real)
+    out = store_with(out, out.values, out.versions, store.gv + n_real)
     return out, trace
 
 

@@ -56,6 +56,23 @@ order at width n_lanes.  Vacant rows (``n_ins == 0`` — shape-bucket
 padding from ``PotSession.submit``) never enter a live set and never
 commit; :func:`prefix_commit` takes the ``real`` mask to enforce it.
 
+**Shard-partitioned stores** (PR 5) — every function in this module is
+layout-polymorphic over :class:`repro.core.tstore.StoreLayout`: with
+the store partitioned into S contiguous range shards
+(:class:`~repro.core.tstore.ShardedStore`), the read phase executes
+against the flat view of the stacked shards (bit-identical — padding
+rows are never addressed), the conflict analysis decomposes per shard
+— (S, K, ceil(C/32)) packed footprints, per-shard tables OR-reduced
+into the carried K×K ``conflict`` (kernels/ops.py ``*_sharded`` twins
+of the full, masked-delta and compact-strip paths) — and
+:func:`fused_write_back` splits into S *independent* scatters (one per
+device under ``jax.experimental.shard_map`` when the layout carries a
+mesh, a vmap over the shard axis otherwise).  The invariant making S a
+pure layout knob: conflict(t, u) == OR over shards of per-shard
+conflicts, and every commit decision stays in global rank space — so
+sharded runs are bit-identical to dense ones (tests/
+test_sharded_store.py, ``scripts/ci.sh --shard-smoke``).
+
 **Vectorized commit pipeline** (PR 2) — the batched commit machinery
 shared by PCC / OCC / DeSTM.  Instead of walking K transactions through
 a `lax.scan` with an O(n_objects) bitmap probe and a `lax.cond`
@@ -92,10 +109,12 @@ All stages reproduce the scan engines' decisions bit-exactly
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.tstore import StoreLayout, flat_values
 from repro.core.txn import (TxnBatch, TxnResult, gather_live_indices,
                             next_pow2, run_compact, run_live,
                             scatter_result, scatter_rows)
@@ -161,12 +180,25 @@ def _dedup_last_writer_reference(waddrs, wn):
     return valid & ~shadowed
 
 
-def apply_writes(values, versions, waddrs, wvals, wn, seq_no):
+def apply_writes(values, versions, waddrs, wvals, wn, seq_no,
+                 layout: StoreLayout | None = None):
     """Write-back one committing txn: install deferred values and stamp the
     objects' versions with the txn's sequence number (paper §3.1: sequence
-    numbers retrofitted as TL2 versions)."""
-    n_obj = values.shape[0]
+    numbers retrofitted as TL2 versions).
+
+    Under a sharded ``layout`` the scatter splits per shard: address a
+    lands in shard a // C at offset a % C — same values, same winners
+    (a transaction's deduped writes hit distinct addresses), hence
+    bit-identical to the dense scatter.
+    """
     keep = dedup_last_writer(waddrs, wn)
+    if layout is not None and layout.sharded:
+        shard = jnp.where(keep, layout.shard_of(waddrs), layout.shards)
+        off = layout.offset_of(waddrs)
+        values = values.at[shard, off].set(wvals, mode="drop")
+        versions = versions.at[shard, off].set(seq_no, mode="drop")
+        return values, versions
+    n_obj = values.shape[0]
     tgt = jnp.where(keep, waddrs, n_obj)
     values = values.at[tgt].set(wvals, mode="drop")
     versions = versions.at[tgt].set(seq_no, mode="drop")
@@ -257,7 +289,8 @@ class RoundState:
 def init_round_state(batch: TxnBatch, values: jax.Array,
                      versions: jax.Array, *,
                      track_conflict: bool = True,
-                     use_matrix: bool | None = None) -> RoundState:
+                     use_matrix: bool | None = None,
+                     layout: StoreLayout | None = None) -> RoundState:
     """A fresh RoundState with empty caches.
 
     ``track_conflict=False`` (DeSTM) carries no table — the engine asks
@@ -270,11 +303,19 @@ def init_round_state(batch: TxnBatch, values: jax.Array,
     PCC/OCC satisfy it by making every pending transaction live, DeSTM
     by making exactly the round's members live (a member's row is only
     ever consumed in its own round).
+
+    Under a sharded ``layout`` the conflict analysis is always the
+    matrix formulation, partitioned per shard: ``foot_bits`` /
+    ``write_bits`` carry (S, K, ceil(C/32)) packed words — each shard's
+    bitset spans only its own C-object range — and ``conflict`` carries
+    the OR-reduced K×K table the decisions consume (decision-identical
+    to both dense formulations; see kernels/ops.py).
     """
+    sharded = layout is not None and layout.sharded
     if use_matrix is None:
-        use_matrix = _matrix_backend()
+        use_matrix = _matrix_backend() or sharded
     k, length = batch.opcodes.shape
-    n_obj, slot = values.shape
+    slot = values.shape[-1]
     z = jnp.zeros
     res = TxnResult(
         raddrs=z((k, length), jnp.int32), rn=z((k,), jnp.int32),
@@ -283,8 +324,12 @@ def init_round_state(batch: TxnBatch, values: jax.Array,
     conflict = foot_bits = write_bits = None
     if track_conflict and use_matrix:
         conflict = z((k, k), bool)
-        if kernel_ops._on_tpu():
-            w = -(-n_obj // 32)
+        if sharded:
+            w = layout.words_per_shard
+            foot_bits = z((layout.shards, k, w), jnp.int32)
+            write_bits = z((layout.shards, k, w), jnp.int32)
+        elif kernel_ops._on_tpu():
+            w = -(-values.shape[0] // 32)
             foot_bits = z((k, w), jnp.int32)
             write_bits = z((k, w), jnp.int32)
     return RoundState(
@@ -295,7 +340,8 @@ def init_round_state(batch: TxnBatch, values: jax.Array,
 
 
 def refresh_round_state(state: RoundState, batch: TxnBatch,
-                        live: jax.Array) -> RoundState:
+                        live: jax.Array,
+                        layout: StoreLayout | None = None) -> RoundState:
     """One round's incremental read phase: re-execute the live rows
     against the current store image and delta-update the carried
     conflict structure.
@@ -309,13 +355,28 @@ def refresh_round_state(state: RoundState, batch: TxnBatch,
       from-scratch table built from the merged ``res``; entries between
       two settled transactions keep last round's verdict (they are
       stale but, by the pending ⊆ live invariant, never consumed).
+
+    Under a sharded ``layout``, execution runs against the flat view of
+    the stacked shards (bit-identical — see ``tstore.flat_values``) and
+    the conflict delta decomposes per shard, OR-reduced into the carried
+    K×K table (kernels/ops.py sharded twins).
     """
-    res = run_live(batch, state.values, live, state.res)
+    sharded = layout is not None and layout.sharded
+    n_obj = layout.n_objects if layout is not None \
+        else state.values.shape[0]
+    res = run_live(batch, flat_values(state.values, layout), live,
+                   state.res, n_objects=n_obj)
     conflict, foot_bits, write_bits = (
         state.conflict, state.foot_bits, state.write_bits)
     if conflict is not None:
-        n_obj = state.values.shape[0]
-        if foot_bits is not None:   # TPU: packed bitsets + masked kernel
+        if sharded:                 # per-shard bitsets, OR-reduced table
+            foot_bits, write_bits = \
+                kernel_ops.update_packed_footprints_sharded(
+                    foot_bits, write_bits, res.raddrs, res.rn,
+                    res.waddrs, res.wn, live, layout)
+            conflict = kernel_ops.conflict_matrix_delta_sharded(
+                foot_bits, write_bits, conflict, live, layout)
+        elif foot_bits is not None:  # TPU: packed bitsets + masked kernel
             foot_bits, write_bits = kernel_ops.update_packed_footprints(
                 foot_bits, write_bits, res.raddrs, res.rn, res.waddrs,
                 res.wn, live, n_obj)
@@ -383,7 +444,8 @@ def run_compact_cascade(ladder: list[int], state, body_at, cond_at):
 
 
 def refresh_round_state_gathered(state: RoundState, batch: TxnBatch,
-                                 idx: jax.Array, valid: jax.Array
+                                 idx: jax.Array, valid: jax.Array,
+                                 layout: StoreLayout | None = None
                                  ) -> tuple[RoundState, TxnResult]:
     """One round's read phase over a caller-gathered compact block: execute
     rows ``batch[idx]`` (``valid`` masks gather padding, possibly with
@@ -407,14 +469,24 @@ def refresh_round_state_gathered(state: RoundState, batch: TxnBatch,
     """
     k, length = batch.opcodes.shape
     width = idx.shape[0]
-    cres = run_compact(batch, state.values, idx, valid)
+    sharded = layout is not None and layout.sharded
+    n_obj = layout.n_objects if layout is not None \
+        else state.values.shape[0]
+    cres = run_compact(batch, flat_values(state.values, layout), idx,
+                       valid, n_objects=n_obj)
     res = scatter_result(state.res, cres, idx, valid, k)
     live = scatter_rows(jnp.zeros((k,), bool), valid, idx, valid)
     conflict, foot_bits, write_bits = (
         state.conflict, state.foot_bits, state.write_bits)
     if conflict is not None:
-        n_obj = state.values.shape[0]
-        if foot_bits is not None:   # TPU: packed strips + pair kernel
+        if sharded:                 # per-shard strips, OR-reduced table
+            foot_bits, write_bits = \
+                kernel_ops.update_packed_footprints_compact_sharded(
+                    foot_bits, write_bits, cres.raddrs, cres.rn,
+                    cres.waddrs, cres.wn, idx, valid, layout)
+            conflict = kernel_ops.conflict_matrix_delta_compact_sharded(
+                foot_bits, write_bits, conflict, idx, valid, layout)
+        elif foot_bits is not None:  # TPU: packed strips + pair kernel
             foot_bits, write_bits = kernel_ops.update_packed_footprints_compact(
                 foot_bits, write_bits, cres.raddrs, cres.rn, cres.waddrs,
                 cres.wn, idx, valid, n_obj)
@@ -437,7 +509,8 @@ def refresh_round_state_gathered(state: RoundState, batch: TxnBatch,
 
 
 def refresh_round_state_compact(state: RoundState, batch: TxnBatch,
-                                live: jax.Array, width: int
+                                live: jax.Array, width: int,
+                                layout: StoreLayout | None = None
                                 ) -> tuple[RoundState, TxnResult,
                                            jax.Array, jax.Array]:
     """One round's read phase at compact width C = ``width``: gather the
@@ -449,7 +522,8 @@ def refresh_round_state_compact(state: RoundState, batch: TxnBatch,
     Returns ``(state, cres, idx, valid)``.
     """
     idx, valid = gather_live_indices(live, width)
-    state, cres = refresh_round_state_gathered(state, batch, idx, valid)
+    state, cres = refresh_round_state_gathered(state, batch, idx, valid,
+                                               layout)
     return state, cres, idx, valid
 
 
@@ -550,7 +624,7 @@ def wave_commit(res, conflict, pending: jax.Array, rank: jax.Array,
 
 
 def fused_write_back(values, versions, waddrs, wvals, wn, committing,
-                     rank, seq_nos):
+                     rank, seq_nos, layout: StoreLayout | None = None):
     """Install a whole round of commits in one flattened scatter.
 
     waddrs (K, L) / wvals (K, L, S) / wn (K,) / committing (K,) /
@@ -563,19 +637,85 @@ def fused_write_back(values, versions, waddrs, wvals, wn, committing,
     shadows the earlier (subsuming :func:`dedup_last_writer`).
     Priorities are unique per slot, hence exactly one winner per
     address and a duplicate-free scatter.
+
+    Under a sharded ``layout`` the round's scatter splits into S
+    *independent* per-shard scatters (winner selection is per address,
+    and an address lives in exactly one shard, so each shard's winners
+    are decided from exactly the writes the dense scatter would route
+    there — bit-identical).  With ``layout.mesh`` set, the S scatters
+    run one-per-device under ``jax.experimental.shard_map``; otherwise
+    they run as one vmap over the shard axis.
     """
+    if layout is not None and layout.sharded:
+        return _fused_write_back_sharded(
+            values, versions, waddrs, wvals, wn, committing, rank,
+            seq_nos, layout)
+    # the dense store IS the one-shard case: shard 0 spanning the whole
+    # address space (every executor address is < n_obj, so the shard
+    # filter is a no-op) — one copy of the winner-selection logic
+    return _shard_write_back(values, versions, 0, waddrs, wvals, wn,
+                             committing, rank, seq_nos, values.shape[0])
+
+
+def _shard_write_back(values_s, versions_s, shard, waddrs, wvals, wn,
+                      committing, rank, seq_nos, shard_size: int):
+    """One shard's slice of :func:`fused_write_back`: the (rank, slot)
+    segment-max winner selection, restricted to the write slots whose
+    address falls in this shard's range and rebased to shard-local
+    offsets.  ``values_s`` (C, slot) / ``versions_s`` (C,).  THE single
+    copy of the winner-selection logic — the dense scatter is the
+    degenerate call with ``shard=0, shard_size=n_obj``."""
+    c = values_s.shape[0]
     k, length = waddrs.shape
-    n_obj = values.shape[0]
     slot = jnp.arange(length)
-    valid = committing[:, None] & (slot[None, :] < wn[:, None])
+    valid = (committing[:, None] & (slot[None, :] < wn[:, None])
+             & (waddrs // shard_size == shard))
     prio = (rank.astype(jnp.int32)[:, None] * length
             + slot[None, :].astype(jnp.int32))
-    addr = jnp.where(valid, waddrs, n_obj).reshape(-1)
+    addr = jnp.where(valid, waddrs % shard_size, c).reshape(-1)
     flat_prio = jnp.where(valid, prio, -1).reshape(-1)
-    best = jnp.full((n_obj + 1,), -1, jnp.int32).at[addr].max(flat_prio)
+    best = jnp.full((c + 1,), -1, jnp.int32).at[addr].max(flat_prio)
     win = valid.reshape(-1) & (flat_prio == best[addr])
-    tgt = jnp.where(win, addr, n_obj)
-    values = values.at[tgt].set(wvals.reshape(k * length, -1), mode="drop")
-    versions = versions.at[tgt].set(
+    tgt = jnp.where(win, addr, c)
+    values_s = values_s.at[tgt].set(wvals.reshape(k * length, -1),
+                                    mode="drop")
+    versions_s = versions_s.at[tgt].set(
         jnp.repeat(jnp.asarray(seq_nos, jnp.int32), length), mode="drop")
-    return values, versions
+    return values_s, versions_s
+
+
+def _fused_write_back_sharded(values, versions, waddrs, wvals, wn,
+                              committing, rank, seq_nos,
+                              layout: StoreLayout):
+    """S independent per-shard commit scatters (see fused_write_back).
+
+    values (S, C, slot) / versions (S, C).  The mesh path shards the
+    store axis one-shard-per-device and replicates the (K, L) round
+    operands — each device installs exactly its own range's writes, no
+    cross-device traffic beyond the broadcast of the round's operands.
+    """
+    wb = functools.partial(_shard_write_back,
+                           shard_size=layout.shard_size)
+    if layout.mesh is None:
+        return jax.vmap(
+            wb, in_axes=(0, 0, 0) + (None,) * 6)(
+                values, versions, jnp.arange(layout.shards), waddrs,
+                wvals, wn, committing, rank, seq_nos)
+
+    from jax.experimental.shard_map import shard_map
+    axis = tuple(layout.mesh.shape.keys())[0]
+    spec = jax.sharding.PartitionSpec
+
+    def body(values_b, versions_b, waddrs, wvals, wn, committing, rank,
+             seq_nos):
+        v, ver = wb(values_b[0], versions_b[0], jax.lax.axis_index(axis),
+                    waddrs, wvals, wn, committing, rank, seq_nos)
+        return v[None], ver[None]
+
+    return shard_map(
+        body, mesh=layout.mesh,
+        in_specs=(spec(axis), spec(axis)) + (spec(),) * 6,
+        out_specs=(spec(axis), spec(axis)),
+        check_rep=False,
+    )(values, versions, waddrs, wvals, wn, committing, rank,
+      jnp.asarray(seq_nos, jnp.int32))

@@ -57,7 +57,7 @@ import numpy as np
 
 from repro.core.engine import EngineDef, ExecTrace, get_engine
 from repro.core.sequencer import ReplaySequencer, RoundRobinSequencer
-from repro.core.tstore import TStore, make_store
+from repro.core.tstore import TStore, make_store, shard_store
 from repro.core.tstore import fingerprint as store_fingerprint
 from repro.core.txn import TxnBatch, next_pow2, pad_batch
 
@@ -65,6 +65,17 @@ from repro.core.txn import TxnBatch, next_pow2, pad_batch
 # bucketed submit (everything else is scalar or per-round)
 _PER_TXN_FIELDS = ("commit_round", "commit_pos", "first_round", "retries",
                    "mode", "wait_rounds")
+
+
+def dense_bucket(k: int) -> int:
+    """The denser small-K bucket ladder (ROADMAP open item): {1, 2, 4, 8}
+    below 8, then multiples of 8 — serving tails with many mid-size
+    batches pad to the next 8 instead of the next power of two (e.g.
+    K=17 runs at 24, not 32), trading a few more compiled rungs for
+    much less vacant-row padding per batch."""
+    if k <= 8:
+        return next_pow2(k)
+    return -(-k // 8) * 8
 
 
 @functools.lru_cache(maxsize=None)
@@ -97,17 +108,48 @@ class PotSession:
         exact shape (bit-identical outcome; see the module docstring).
         False submits exact shapes (one compile each — the pre-PR4
         behavior, kept for benchmarking the recompile cost).
+      bucket_ladder: the K-axis bucket family.  ``"pow2"`` (default)
+        rounds K up to the next power of two; ``"dense"`` uses the
+        denser serving-tail ladder {1, 2, 4, 8} ∪ multiples of 8
+        (ROADMAP open item) — less padding waste per small/mid batch at
+        the cost of more rungs (compile count still bounded by the
+        ladder size; asserted in tests).  The L axis always buckets to
+        powers of two.
+      shards: partition the store's address space into S contiguous
+        range shards (:class:`~repro.core.tstore.ShardedStore`):
+        per-shard conflict analysis and S independent write-back
+        scatters, with every commit decision still taken in global rank
+        space — fingerprints, traces and ``replay_log()`` are
+        bit-identical to ``shards=1`` (the dense store).
+      mesh: optional 1-axis ``jax.sharding.Mesh`` of exactly ``shards``
+        devices; when given, the per-shard write-back scatters run
+        one-per-device under ``jax.experimental.shard_map``.  The mesh
+        travels on the store pytree as a static field, so it threads
+        through the cached jitted step with no signature change.
     """
 
     def __init__(self, n_objects: int | None = None, *, slot: int = 1,
                  init=None, store: TStore | None = None,
                  engine: str | EngineDef = "pcc", sequencer=None,
                  n_lanes: int = 1, donate: bool = True,
-                 bucket: bool = True):
+                 bucket: bool = True, bucket_ladder: str = "pow2",
+                 shards: int = 1, mesh=None):
         if store is None:
             if n_objects is None:
                 raise ValueError("PotSession needs n_objects or store")
-            store = make_store(n_objects, slot=slot, init=init)
+            store = make_store(n_objects, slot=slot, init=init,
+                               shards=shards, mesh=mesh)
+        elif shards > 1 or mesh is not None:
+            if not isinstance(store, TStore):
+                raise ValueError(
+                    "pass either an already-sharded store OR shards=/"
+                    "mesh= with a dense store, not both")
+            store = shard_store(store, shards, mesh=mesh)
+        if bucket_ladder not in ("pow2", "dense"):
+            raise ValueError(
+                f"bucket_ladder must be 'pow2' or 'dense', "
+                f"got {bucket_ladder!r}")
+        self.bucket_ladder = bucket_ladder
         self.store = store
         self.engine = engine if isinstance(engine, EngineDef) \
             else get_engine(engine)
@@ -129,11 +171,15 @@ class PotSession:
 
     # ------------------------------------------------------------- stream
     def _bucket_shape(self, batch: TxnBatch) -> tuple[int, int]:
-        """The (K, L) step shape a batch runs at: the next power-of-two
-        bucket when bucketing, the exact shape otherwise."""
+        """The (K, L) step shape a batch runs at: the exact shape when not
+        bucketing, else K rounded up along the session's bucket ladder
+        (pow2, or the denser {1, 2, 4, 8} ∪ 8·n serving ladder) and L to
+        the next power of two."""
         if not self.bucket:
             return batch.n_txns, batch.max_ins
-        return next_pow2(batch.n_txns), next_pow2(batch.max_ins)
+        return (dense_bucket(batch.n_txns)
+                if self.bucket_ladder == "dense"
+                else next_pow2(batch.n_txns)), next_pow2(batch.max_ins)
 
     def submit(self, batch: TxnBatch, lanes: Sequence | None = None
                ) -> ExecTrace:

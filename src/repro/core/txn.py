@@ -96,15 +96,24 @@ def make_batch(progs: list[list[tuple]], max_ins: int | None = None) -> TxnBatch
     )
 
 
-def run_txn(batch_row, values: jax.Array) -> tuple:
+def run_txn(batch_row, values: jax.Array,
+            n_objects: int | None = None) -> tuple:
     """Execute ONE transaction speculatively against a store image.
 
     ``batch_row`` — a TxnBatch pytree sliced to one transaction (arrays of
     shape (L,) / (L,)).  ``values`` — (O, S) committed store image.  Pure:
     returns the footprint + deferred writes, never mutates ``values``
     (deferred-update OCC read phase, Fig. 2a).
+
+    ``n_objects`` — the real object count when ``values`` is a *padded*
+    flat view (the sharded store's stacked shards reshape to
+    S*ceil(O/S) >= O rows, see ``tstore.flat_values``).  Effective
+    addresses are reduced mod ``n_objects``, so execution against the
+    padded view is bit-identical to the dense (O, S) image: the padding
+    rows are never addressed.  Defaults to ``values.shape[0]``.
     """
-    n_obj, slot = values.shape
+    n_obj = n_objects if n_objects is not None else values.shape[0]
+    slot = values.shape[1]
     length = batch_row.opcodes.shape[0]
 
     def step(carry, t):
@@ -153,11 +162,13 @@ def run_txn(batch_row, values: jax.Array) -> tuple:
     return raddrs, rn, waddrs, wvals, wn
 
 
-def run_all(batch: TxnBatch, values: jax.Array) -> TxnResult:
+def run_all(batch: TxnBatch, values: jax.Array,
+            n_objects: int | None = None) -> TxnResult:
     """Speculatively execute every transaction in the batch (vmapped) against
-    the same committed store image — one engine "round" of read phases."""
-    raddrs, rn, waddrs, wvals, wn = jax.vmap(run_txn, in_axes=(0, None))(
-        batch, values)
+    the same committed store image — one engine "round" of read phases.
+    ``n_objects`` as in :func:`run_txn` (padded flat store views)."""
+    raddrs, rn, waddrs, wvals, wn = jax.vmap(
+        run_txn, in_axes=(0, None, None))(batch, values, n_objects)
     return TxnResult(raddrs=raddrs, rn=rn, waddrs=waddrs, wvals=wvals, wn=wn)
 
 
@@ -192,7 +203,8 @@ def pad_batch(batch: TxnBatch, n_txns: int, max_ins: int) -> TxnBatch:
 
 
 def run_live(batch: TxnBatch, values: jax.Array, live: jax.Array,
-             cache: TxnResult | None = None) -> TxnResult:
+             cache: TxnResult | None = None,
+             n_objects: int | None = None) -> TxnResult:
     """Masked re-execution: run only the *live* transactions, reuse cached
     rows for the settled ones.
 
@@ -218,7 +230,7 @@ def run_live(batch: TxnBatch, values: jax.Array, live: jax.Array,
         opcodes=batch.opcodes, addrs=batch.addrs, indirect=batch.indirect,
         operands=batch.operands,
         n_ins=jnp.where(live, batch.n_ins, 0))
-    fresh = run_all(masked, values)
+    fresh = run_all(masked, values, n_objects)
     if cache is None:
         return fresh
 
@@ -258,7 +270,8 @@ def gather_live_indices(live: jax.Array, width: int
 
 
 def run_compact(batch: TxnBatch, values: jax.Array, idx: jax.Array,
-                valid: jax.Array) -> TxnResult:
+                valid: jax.Array,
+                n_objects: int | None = None) -> TxnResult:
     """Execute the gathered rows ``batch[idx]`` against ``values`` at
     compact width C = idx.shape[0].  Rows with ``~valid`` (gather padding,
     possibly duplicate indices) run inert (``n_ins`` masked to 0) and come
@@ -269,7 +282,7 @@ def run_compact(batch: TxnBatch, values: jax.Array, idx: jax.Array,
         opcodes=cbatch.opcodes, addrs=cbatch.addrs,
         indirect=cbatch.indirect, operands=cbatch.operands,
         n_ins=jnp.where(valid, cbatch.n_ins, 0))
-    return run_all(cbatch, values)
+    return run_all(cbatch, values, n_objects)
 
 
 def scatter_rows(dst: jax.Array, src: jax.Array, idx: jax.Array,
@@ -298,7 +311,8 @@ def scatter_result(cache: TxnResult, cres: TxnResult, idx: jax.Array,
 
 
 def run_live_compact(batch: TxnBatch, values: jax.Array, live: jax.Array,
-                     cache: TxnResult, width: int
+                     cache: TxnResult, width: int,
+                     n_objects: int | None = None
                      ) -> tuple[TxnResult, TxnResult, jax.Array, jax.Array]:
     """Compact equivalent of :func:`run_live`: gather the live rows into a
     (width, L) block, execute it, scatter back over ``cache``.
@@ -310,6 +324,6 @@ def run_live_compact(batch: TxnBatch, values: jax.Array, live: jax.Array,
     (the incremental conflict-strip update, DeSTM's token walk).
     """
     idx, valid = gather_live_indices(live, width)
-    cres = run_compact(batch, values, idx, valid)
+    cres = run_compact(batch, values, idx, valid, n_objects)
     merged = scatter_result(cache, cres, idx, valid, batch.n_txns)
     return merged, cres, idx, valid

@@ -221,6 +221,182 @@ def conflict_matrix_delta(foot_bits: jax.Array, write_bits: jax.Array,
     return jnp.where(refresh, fresh, old)
 
 
+# --------------------------------------------------------------------------
+# Shard-partitioned conflict analysis (PR 5)
+# --------------------------------------------------------------------------
+#
+# Under the sharded store layout (tstore.StoreLayout, S contiguous range
+# shards of C = ceil(O/S) objects) the packed footprints decompose per
+# shard: each shard packs only the addresses in its range into
+# (K, ceil(C/32)) words — the conflict kernels' W axis shrinks by S —
+# and the global conflict verdict is the OR over shards:
+#
+#     footprint(i) ∩ writes(j) ≠ ∅  ⟺  ∃s: foot_s(i) ∩ writes_s(j) ≠ ∅
+#
+# because the shards partition the address space.  Every function below
+# is the per-shard twin of a dense one above, OR-reducing S independent
+# intersections (the TPU path runs one bitset kernel per shard — each a
+# candidate for its own device — and off-TPU a per-shard dense bit-ops
+# fallback); verdicts are bit-identical to the dense formulation
+# (asserted in tests/test_sharded_store.py).
+
+
+def packed_footprints_sharded(raddrs: jax.Array, rn: jax.Array,
+                              waddrs: jax.Array, wn: jax.Array, layout
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Per-shard bit-packing of a batch's (footprint, write-set) address
+    sets: (S, K, ceil(C/32)) int32 words each.  Shard s packs the slots
+    whose address lies in [s*C, (s+1)*C), rebased to shard-local bits."""
+    c = layout.shard_size
+    length = raddrs.shape[1]
+    slot = jnp.arange(length)[None, :]
+    rvalid = slot < rn[:, None]
+    wvalid = slot < wn[:, None]
+
+    def per_shard(s):
+        rb = _val.pack_addr_sets_masked(
+            raddrs - s * c, rvalid & (raddrs // c == s), c)
+        wb = _val.pack_addr_sets_masked(
+            waddrs - s * c, wvalid & (waddrs // c == s), c)
+        return rb | wb, wb
+
+    return jax.vmap(per_shard)(jnp.arange(layout.shards))
+
+
+def update_packed_footprints_sharded(foot_bits: jax.Array,
+                                     write_bits: jax.Array,
+                                     raddrs: jax.Array, rn: jax.Array,
+                                     waddrs: jax.Array, wn: jax.Array,
+                                     live: jax.Array, layout
+                                     ) -> tuple[jax.Array, jax.Array]:
+    """Sharded twin of :func:`update_packed_footprints`: re-pack only the
+    live rows (every shard's row strip for a live transaction), keep the
+    settled rows' words in all S shards."""
+    fresh_foot, fresh_write = packed_footprints_sharded(
+        raddrs, jnp.where(live, rn, 0), waddrs, jnp.where(live, wn, 0),
+        layout)
+    keep = live[None, :, None]
+    return (jnp.where(keep, fresh_foot, foot_bits),
+            jnp.where(keep, fresh_write, write_bits))
+
+
+def update_packed_footprints_compact_sharded(foot_bits: jax.Array,
+                                             write_bits: jax.Array,
+                                             raddrs: jax.Array,
+                                             rn: jax.Array,
+                                             waddrs: jax.Array,
+                                             wn: jax.Array,
+                                             idx: jax.Array,
+                                             valid: jax.Array, layout
+                                             ) -> tuple[jax.Array,
+                                                        jax.Array]:
+    """Sharded twin of :func:`update_packed_footprints_compact`: pack the
+    gathered (C_rows, L) block per shard — O(S·C_rows·L) — and scatter
+    each shard's row strip over the carried (S, K, W_s) words."""
+    from repro.core.txn import scatter_rows
+    cfoot, cwrite = packed_footprints_sharded(
+        raddrs, jnp.where(valid, rn, 0), waddrs, jnp.where(valid, wn, 0),
+        layout)
+    scatter = jax.vmap(scatter_rows, in_axes=(0, 0, None, None))
+    return scatter(foot_bits, cfoot, idx, valid), \
+        scatter(write_bits, cwrite, idx, valid)
+
+
+def _shard_intersects(foot_s: jax.Array, write_s: jax.Array) -> jax.Array:
+    """One shard's (K, K) intersection verdicts from packed words."""
+    return ((foot_s[:, None, :] & write_s[None, :, :]) != 0).any(axis=2)
+
+
+def conflict_matrix_sharded(foot_bits: jax.Array,
+                            write_bits: jax.Array) -> jax.Array:
+    """(K, K) conflict table from per-shard packed sets (S, K, W_s):
+    the OR over shards of each shard's bitset intersection.  TPU runs
+    the tiled Pallas kernel once per shard (W axis = W_s, not W);
+    off-TPU a per-shard dense bit-ops reduction (looped, so peak memory
+    is one shard's (K, K, W_s) tile, not S of them)."""
+    s, k, _ = foot_bits.shape
+    if _on_tpu():
+        rows = max(_conf.BI, _conf.BJ)
+        out = jnp.zeros((k, k), bool)
+        for i in range(s):
+            fb = _pad_to(_pad_to(foot_bits[i], rows, 0), _conf.BW, 1)
+            wb = _pad_to(_pad_to(write_bits[i], rows, 0), _conf.BW, 1)
+            out = out | _conf.conflict_matrix_bits(
+                fb, wb, interpret=False)[:k, :k]
+        return out
+    out = jnp.zeros((k, k), bool)
+    for i in range(s):
+        out = out | _shard_intersects(foot_bits[i], write_bits[i])
+    return out
+
+
+def conflict_matrix_delta_sharded(foot_bits: jax.Array,
+                                  write_bits: jax.Array, old: jax.Array,
+                                  live: jax.Array, layout) -> jax.Array:
+    """Sharded twin of :func:`conflict_matrix_delta`: recompute entry
+    (i, j) iff i or j is live, as the OR over shards of per-shard
+    verdicts; stale entries carry ``old``.  On TPU each shard runs the
+    masked-row delta kernel against ``old`` (a stale tile ORs to itself,
+    a refreshed one to the OR of shard-fresh verdicts); off-TPU the
+    per-shard dense reduction + recompute-and-select."""
+    s, k, _ = foot_bits.shape
+    if _on_tpu():
+        rows = max(_conf.BI, _conf.BJ)
+        old_p = _pad_to(_pad_to(old.astype(jnp.int32), rows, 0), rows, 1)
+        live_p = _pad_to(live.astype(jnp.int32), rows, 0)
+        out = jnp.zeros_like(old_p)
+        for i in range(s):
+            fb = _pad_to(_pad_to(foot_bits[i], rows, 0), _conf.BW, 1)
+            wb = _pad_to(_pad_to(write_bits[i], rows, 0), _conf.BW, 1)
+            out = out | _conf.conflict_matrix_bits_delta(
+                fb, wb, old_p, live_p, interpret=False)
+        return out[:k, :k] != 0
+    fresh = conflict_matrix_sharded(foot_bits, write_bits)
+    refresh = live[:, None] | live[None, :]
+    return jnp.where(refresh, fresh, old)
+
+
+def conflict_matrix_delta_compact_sharded(foot_bits: jax.Array,
+                                          write_bits: jax.Array,
+                                          old: jax.Array, idx: jax.Array,
+                                          valid: jax.Array,
+                                          layout) -> jax.Array:
+    """Sharded twin of :func:`conflict_matrix_delta_compact`: the round's
+    two refreshed strips — rows idx (C, K) and columns idx (K, C) — are
+    each the OR over shards of per-shard strips (rectangular pair kernel
+    on TPU, dense bit-ops off it), scattered over last round's table.
+    ``foot_bits``/``write_bits`` (S, K, W_s) must already hold the
+    refreshed live rows (:func:`update_packed_footprints_compact_sharded`).
+    """
+    from repro.core.txn import scatter_rows
+    s, k, _ = foot_bits.shape
+    c = idx.shape[0]
+    row_strip = jnp.zeros((c, k), bool)
+    col_strip = jnp.zeros((k, c), bool)
+    if _on_tpu():
+        for i in range(s):
+            fb = _pad_to(_pad_to(foot_bits[i], _conf.BI, 0), _conf.BW, 1)
+            wb = _pad_to(_pad_to(write_bits[i], _conf.BJ, 0), _conf.BW, 1)
+            cf = _pad_to(_pad_to(foot_bits[i][idx], _conf.BI, 0),
+                         _conf.BW, 1)
+            cw = _pad_to(_pad_to(write_bits[i][idx], _conf.BJ, 0),
+                         _conf.BW, 1)
+            row_strip = row_strip | _conf.conflict_matrix_bits_pair(
+                cf, wb, interpret=False)[:c, :k]
+            col_strip = col_strip | _conf.conflict_matrix_bits_pair(
+                fb, cw, interpret=False)[:k, :c]
+    else:
+        for i in range(s):
+            row_strip = row_strip | _shard_intersects(
+                foot_bits[i][idx], write_bits[i])
+            col_strip = col_strip | _shard_intersects(
+                foot_bits[i], write_bits[i][idx])
+    new = scatter_rows(old, row_strip, idx, valid)
+    # column twin of scatter_rows: same sentinel-drop contract, axis 1
+    tgt = jnp.where(valid, idx, k)
+    return new.at[:, tgt].set(col_strip, mode="drop")
+
+
 def adamw_update(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999,
                  eps=1e-8, wd=0.01):
     """Fast-mode fused AdamW over an arbitrary-shaped parameter leaf."""

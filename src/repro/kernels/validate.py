@@ -70,11 +70,26 @@ def pack_addr_sets(addrs: jax.Array, n: jax.Array, n_objects: int) -> jax.Array:
     Pure-jnp helper (runs under jit); the scatter is regular enough for
     XLA — the hot reduction is the Pallas kernel above.
     """
+    length = addrs.shape[1]
+    valid = jnp.arange(length)[None, :] < n[:, None]
+    return pack_addr_sets_masked(addrs, valid, n_objects)
+
+
+def pack_addr_sets_masked(addrs: jax.Array, valid: jax.Array,
+                          n_objects: int) -> jax.Array:
+    """Bit-pack (K, L) address sets under an explicit (K, L) validity mask.
+
+    The shard-partitioned packing primitive (PR 5): a shard packs only
+    the slots whose address falls inside its range, so ``valid`` is not
+    expressible as a per-row prefix count.  Addresses must already be
+    shard-local (callers subtract the shard base); invalid slots may
+    hold any value — they are routed to the out-of-range word and
+    dropped.
+    """
     k, length = addrs.shape
     w = -(-n_objects // 32)
     word = addrs // 32
     bit = (jnp.uint32(1) << (addrs % 32).astype(jnp.uint32)).astype(jnp.uint32)
-    valid = jnp.arange(length)[None, :] < n[:, None]
     word = jnp.where(valid, word, w)  # out-of-range -> dropped
 
     def body(j, acc):
