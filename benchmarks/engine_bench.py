@@ -45,11 +45,26 @@ One PR 5 section:
   plus the write-back PRIMITIVE (``protocol.fused_write_back``) timed
   per S on one full committing round.
 
+One PR 6 section:
+
+* ingress (axis="ingress"): the deterministic serve loop — arrival
+  journal -> IngressPool admission -> priority drain -> PotSession —
+  timed against direct submission of the same pre-formed batches (the
+  delta is the host-side ingress overhead) and the drain-only former;
+  plus the occupancy-driven bucket-ladder auto-selection vs a pinned
+  pow2 ladder (compile counts + padding waste, fingerprints asserted
+  bit-identical).
+
 ``--shard-smoke`` (scripts/ci.sh --shard-smoke): asserts sharded ==
 dense store fingerprints and traces across engines at S in {1, 2, 8},
 and — when the host exposes multiple devices
 (XLA_FLAGS=--xla_force_host_platform_device_count=8) — the shard_map
 per-device write-back path on a real mesh.
+
+``--ingress-smoke`` (scripts/ci.sh --ingress-smoke): asserts two
+IngressPool replicas fed the same arrival journal agree bitwise —
+fingerprints + replay logs — across different drain budget schedules,
+and that a full journal replay reproduces the formed batch stream.
 
 ``--smoke`` (scripts/ci.sh --bench-smoke): tiny K, asserts the four
 implementations' store fingerprints and commit positions are bitwise
@@ -70,6 +85,7 @@ Usage:
   python benchmarks/engine_bench.py --smoke
   python benchmarks/engine_bench.py --incremental-smoke
   python benchmarks/engine_bench.py --compact-smoke
+  python benchmarks/engine_bench.py --ingress-smoke
 """
 
 from __future__ import annotations
@@ -261,6 +277,7 @@ def run_bench(ks, contentions, iters: int) -> dict:
     live_fraction_sweep(iters, results)
     ragged_stream_bench(results)
     shard_sweep(iters, results)
+    ingress_bench(iters, results)
     return dict(results=results)
 
 
@@ -426,6 +443,93 @@ def shard_sweep(iters: int, results: list, k: int = 256,
                 writes_per_sec=round(float(res.wn.sum()) / secs, 1)))
             print(f"write_back K={k} {cont:4s} S={shards}  "
                   f"{secs * 1e6:9.1f} us")
+
+
+def _fill_pool(wl, fees, **pool_kwargs):
+    """Admit a workload's transactions (with per-txn fees) into a fresh
+    IngressPool — the arrival side of the PR 6 ingress axis."""
+    from repro.core import IngressPool
+    from repro.core.ingress import programs_from_batch
+
+    pool = IngressPool(**pool_kwargs)
+    for p, lane, fee in zip(programs_from_batch(wl.batch),
+                            wl.lanes.tolist(), fees):
+        pool.admit(p, lane=lane, fee=int(fee))
+    return pool
+
+
+def ingress_bench(iters: int, results: list, k: int = 256,
+                  budget: int = 24) -> None:
+    """PR 6 ingress axis: (a) the full serve loop — journal-fed
+    admission + priority drain + batch forming + execution — against
+    direct submission of the same pre-formed batches (the delta is the
+    deterministic host-side ingress overhead) and against the drain-only
+    former (its raw throughput); (b) the occupancy-driven bucket-ladder
+    auto-selection against a pinned pow2 ladder on a mid-size drain
+    tail: compile counts and padding waste, fingerprints asserted
+    bit-identical (padding is vacant rows — the choice can never change
+    committed state)."""
+    from repro.core import IngressPool, PotSession
+
+    wl = _workload(k, "low", seed=37)
+    rng = np.random.default_rng(41)
+    src = _fill_pool(wl, rng.integers(0, 8, k).tolist(),
+                     capacity=4 * k)
+    arrivals = src.arrival_journal()
+    twin, _ = IngressPool.replay(arrivals)
+    formed = twin.drain_all(budget)
+
+    session = PotSession(wl.n_objects, engine="pcc", n_lanes=wl.n_lanes)
+
+    def serve_path():
+        pool, _ = IngressPool.replay(arrivals)
+        return session.serve(pool, budget=budget)
+
+    def direct_path():
+        return [session._submit_seq(fb.batch, fb.seq, fb.lanes,
+                                    ladder=fb.ladder) for fb in formed]
+
+    def drain_only():
+        pool, _ = IngressPool.replay(arrivals)
+        return pool.drain_all(budget)
+
+    direct_path()   # warm the step compile cache for both paths
+    timings = {
+        "serve": timeit(lambda: jax.block_until_ready(
+            serve_path()[-1].commit_pos), warmup=1, iters=iters),
+        "direct": timeit(lambda: jax.block_until_ready(
+            direct_path()[-1].commit_pos), warmup=1, iters=iters),
+        "drain_only": timeit(drain_only, warmup=1, iters=iters),
+    }
+    for impl, secs in timings.items():
+        results.append(dict(
+            engine="ingress", k=k, impl=impl, axis="ingress",
+            L=wl.batch.max_ins, slot=1, n_lanes=wl.n_lanes,
+            contention="low", budget=budget, n_batches=len(formed),
+            seconds=round(secs, 6), txns_per_sec=round(k / secs, 1)))
+        print(f"ingress K={k:<5d} budget={budget} {impl:11s} "
+              f"{secs * 1e3:9.2f} ms  {k / secs:12.1f} txn/s")
+
+    # (b) occupancy-driven ladder auto-selection vs pinned pow2
+    fps = {}
+    for mode, pin in (("auto", None), ("pow2", "pow2")):
+        s = PotSession(wl.n_objects, engine="pcc", n_lanes=wl.n_lanes)
+        pool, _ = IngressPool.replay(arrivals)
+        s.serve(pool, budget=budget, ladder=pin)
+        waste = sum(bk * c for (bk, _), c in
+                    s.bucket_counts().items()) - k
+        fps[mode] = s.fingerprint()
+        results.append(dict(
+            engine="ingress", k=k, impl=f"ladder_{mode}", axis="ingress",
+            L=wl.batch.max_ins, slot=1, n_lanes=wl.n_lanes,
+            contention="low", budget=budget,
+            compile_count=s.compile_count(), padding_waste_rows=waste,
+            bucket_counts={str(kk): v for kk, v in
+                           sorted(s.bucket_counts().items())}))
+        print(f"ingress K={k:<5d} budget={budget} ladder={mode:5s} "
+              f"compiles={s.compile_count()} padding_waste={waste}")
+    assert fps["auto"] == fps["pow2"], (
+        "bucket-ladder choice changed committed state")
 
 
 def summarize(results) -> dict:
@@ -646,6 +750,48 @@ def run_shard_smoke() -> None:
           f"masked paths); {mesh_msg}")
 
 
+def run_ingress_smoke() -> None:
+    """CI gate (scripts/ci.sh --ingress-smoke): two IngressPool replicas
+    fed the same arrival journal, drained under DIFFERENT budget
+    schedules covering the same prefix, must produce bit-identical batch
+    streams, store fingerprints and replay logs through PotSession — and
+    a full journal replay must reproduce the exact FormedBatch stream
+    (sequence numbers, txn ids, ladder choices)."""
+    from repro.core import IngressPool, PotSession
+
+    wl = _workload(48, "med", seed=13)
+    rng = np.random.default_rng(7)
+    src = _fill_pool(wl, rng.integers(0, 9, 48).tolist(), capacity=64)
+    arrivals = src.arrival_journal()
+    outs = []
+    for budgets in ([48], [5, 9, 3, 31], [7] * 7):
+        pool, _ = IngressPool.replay(arrivals)
+        s = PotSession(wl.n_objects, engine="pcc", n_lanes=wl.n_lanes)
+        for b in budgets:
+            fb = pool.drain(b)
+            if fb is None:
+                break
+            s._submit_seq(fb.batch, fb.seq, fb.lanes, ladder=fb.ladder)
+        assert pool.depth == 0, "drain schedule left txns behind"
+        outs.append((s.fingerprint(), s.replay_log()))
+    assert outs[0] == outs[1] == outs[2], (
+        "ingress replicas diverged across drain budget schedules")
+    # journal replay reproduces the formed stream bit-exactly
+    pool, _ = IngressPool.replay(arrivals)
+    formed = pool.drain_all(11)
+    _, replayed = IngressPool.replay(pool.journal())
+    assert len(replayed) == len(formed)
+    for a, b in zip(formed, replayed):
+        assert np.array_equal(a.txn_ids, b.txn_ids), "txn_ids diverged"
+        assert np.array_equal(a.seq, b.seq), "seq diverged"
+        assert np.array_equal(a.lanes, b.lanes), "lanes diverged"
+        assert a.ladder == b.ladder, "ladder choice diverged"
+    print("ingress-smoke OK: replicas on one arrival journal agree "
+          "bitwise across drain schedules ([48], [5,9,3,31], [7]*7) — "
+          "fingerprints + replay logs — and journal replay reproduces "
+          f"the {len(formed)}-batch formed stream exactly")
+
+
 def run() -> None:
     """benchmarks/run.py entry point: one incremental-vs-rebuild-vs-
     compact row per engine at K=256 low contention, a shards row
@@ -696,6 +842,27 @@ def run() -> None:
         emit(f"engine_bench_ragged8_{mode}",
              (time.perf_counter() - t0) * 1e6,
              f"compiles={s.compile_count()}")
+    # ingress serve loop vs direct submit of the pre-formed batches
+    from repro.core import IngressPool
+    wl2 = _workload(128, "low", seed=6)
+    rng2 = np.random.default_rng(5)
+    arrivals = _fill_pool(wl2, rng2.integers(0, 8, 128).tolist(),
+                          capacity=512).arrival_journal()
+    twin, _ = IngressPool.replay(arrivals)
+    formed = twin.drain_all(24)
+    s = PotSession(wl2.n_objects, engine="pcc", n_lanes=wl2.n_lanes)
+    direct = lambda: [s._submit_seq(fb.batch, fb.seq, fb.lanes,
+                                    ladder=fb.ladder) for fb in formed]
+    direct()   # warm the step compiles
+    t_direct = timeit(lambda: jax.block_until_ready(
+        direct()[-1].commit_pos), warmup=1, iters=3)
+    t_serve = timeit(lambda: jax.block_until_ready(
+        s.serve(IngressPool.replay(arrivals)[0],
+                budget=24)[-1].commit_pos), warmup=1, iters=3)
+    emit("engine_bench_ingress_serve_k128", t_serve * 1e6,
+         f"direct_over_serve={t_direct / t_serve:.2f}x;"
+         f"batches={len(formed)};budget=24;"
+         f"ladder={formed[0].ladder}")
 
 
 def main() -> None:
@@ -711,6 +878,11 @@ def main() -> None:
                     help="assert sharded store == dense store across "
                          "engines and paths (+ shard_map mesh when "
                          "multiple devices are exposed)")
+    ap.add_argument("--ingress-smoke", action="store_true",
+                    help="assert ingress replicas on one arrival journal "
+                         "agree bitwise across drain budget schedules "
+                         "and that journal replay reproduces the formed "
+                         "batch stream")
     ap.add_argument(
         "--out",
         default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -729,6 +901,9 @@ def main() -> None:
         return
     if args.shard_smoke:
         run_shard_smoke()
+        return
+    if args.ingress_smoke:
+        run_ingress_smoke()
         return
 
     ks = (64, 256, 1024)

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
 # the test suite: it executes every engine through the preserved legacy
@@ -25,6 +25,12 @@
 # the per-shard write-back running one-shard-per-device via shard_map
 # (the shard-decomposition equivalence gate).
 #
+# --ingress-smoke runs benchmarks/engine_bench.py --ingress-smoke: two
+# PR6 IngressPool replicas fed the same arrival journal, drained under
+# different budget schedules, agree bitwise through PotSession —
+# fingerprints + replay logs — and a full journal replay reproduces the
+# formed batch stream exactly (the deterministic-ingress gate).
+#
 # Stages do NOT short-circuit each other: every requested stage runs and
 # the script exits non-zero if ANY stage failed (the last failing stage's
 # exit code is propagated).
@@ -36,6 +42,7 @@ BENCH_SMOKE=0
 INCREMENTAL_SMOKE=0
 COMPACT_SMOKE=0
 SHARD_SMOKE=0
+INGRESS_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
   case "$arg" in
@@ -43,6 +50,7 @@ for arg in "$@"; do
     --incremental-smoke) INCREMENTAL_SMOKE=1 ;;
     --compact-smoke) COMPACT_SMOKE=1 ;;
     --shard-smoke) SHARD_SMOKE=1 ;;
+    --ingress-smoke) INGRESS_SMOKE=1 ;;
     *) PYTEST_ARGS+=("$arg") ;;
   esac
 done
@@ -80,6 +88,10 @@ if [[ "$SHARD_SMOKE" == "1" ]]; then
   run_stage shard-smoke env \
     XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     python benchmarks/engine_bench.py --shard-smoke
+fi
+
+if [[ "$INGRESS_SMOKE" == "1" ]]; then
+  run_stage ingress-smoke python benchmarks/engine_bench.py --ingress-smoke
 fi
 
 exit "$FAIL"

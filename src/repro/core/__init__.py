@@ -14,6 +14,13 @@ session-oriented:
         vacant NOP rows (which provably never commit), so a ragged
         stream compiles per bucket, not per shape
         (``compile_count()`` / ``bucket_counts()``).
+    IngressPool                              — deterministic ingress:
+        admission pool (per-client lanes, fee/age/size priority, bounded
+        capacity with watermark eviction + backpressure, logical stamps
+        only — no wall-clock) whose ``drain(budget)`` *forms* batches in
+        a deterministic priority order; ``PotSession.serve(pool)`` makes
+        the drain order the preordered sequence, and the arrival journal
+        replays bit-exactly (``IngressPool.replay``).
     get_engine / ENGINES / Engine / EngineDef — engine registry:
         "pcc" (Pot Concurrency Control), "pogl", "destm", "occ"
         (and "pot" as an alias for "pcc"), every one returning the
@@ -45,6 +52,8 @@ with their divergent signatures, and the old per-engine trace classes
 """
 
 from repro.core.destm import DestmTrace, destm_execute
+from repro.core.ingress import (AdmitResult, FormedBatch, IngressPool,
+                                PoolStats, programs_from_batch)
 from repro.core.engine import (ENGINES, MODE_FAST, MODE_PREFIX, MODE_SPEC,
                                MODE_UNSET, Engine, EngineDef, ExecTrace,
                                get_engine, make_trace)
@@ -75,6 +84,9 @@ __all__ = [
     # sequencers
     "RoundRobinSequencer", "ReplaySequencer", "ExplicitSequencer",
     "seq_to_order",
+    # deterministic ingress (admission pool + priority-drain former)
+    "IngressPool", "FormedBatch", "AdmitResult", "PoolStats",
+    "programs_from_batch",
     # deprecated per-engine entry points
     "pcc_execute", "PccTrace",
     "occ_execute", "OccTrace",

@@ -51,18 +51,27 @@ class EngineReport:
     compile_count: int = 0   # distinct compiled step shapes of the session
     #                          behind this trace (bucketed streaming: <=
     #                          ladder size; 0 when no session was given)
+    # -- ingress observables (PR 6): filled when a pool= is given -------
+    queue_depth: int = 0     # transactions still parked in the pool
+    admitted: int = 0        # pool admissions accepted so far
+    evicted: int = 0         # watermark evictions so far
+    drained: int = 0         # transactions formed into batches so far
+    backpressure: int = 0    # 1 when the pool's backpressure signal is up
 
     def row(self) -> str:
         return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
                 f"{self.critical_path:.0f},{self.total_wait_rounds},"
                 f"{self.retries},{self.fast_commits},{self.prefix_commits},"
                 f"{self.throughput:.5f},{self.wave_trips},{self.live_txns},"
-                f"{self.walked_slots},{self.compile_count}")
+                f"{self.walked_slots},{self.compile_count},"
+                f"{self.queue_depth},{self.admitted},{self.evicted},"
+                f"{self.drained},{self.backpressure}")
 
 
 HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
           "fast_commits,prefix_commits,throughput,wave_trips,live_txns,"
-          "walked_slots,compile_count")
+          "walked_slots,compile_count,queue_depth,admitted,evicted,"
+          "drained,backpressure")
 
 
 def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
@@ -74,7 +83,8 @@ def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
 
 
 def report_from_trace(name: str, trace, batch, res_rn, res_wn,
-                      n_lanes: int = 1, session=None) -> EngineReport:
+                      n_lanes: int = 1, session=None,
+                      pool=None) -> EngineReport:
     """Build an EngineReport from the canonical ExecTrace of any engine.
 
     ``name`` picks the engine's cost structure ("pot"/"pcc", "pogl",
@@ -85,6 +95,11 @@ def report_from_trace(name: str, trace, batch, res_rn, res_wn,
     ``session`` optionally attaches the PotSession the trace came from,
     filling the CSV's compile-cache columns (``compile_count`` — the
     shape-bucketing observable; see PotSession.compile_count()).
+
+    ``pool`` optionally attaches the IngressPool that formed the batch,
+    filling the ingress columns (queue depth, admitted/evicted/drained
+    counters and the backpressure signal — see
+    ``IngressPool.observables()``).
     """
     kind = {"pot": "pot", "pcc": "pot"}.get(name, name)
     if kind == "pot":
@@ -101,6 +116,13 @@ def report_from_trace(name: str, trace, batch, res_rn, res_wn,
         rep.walked_slots = int(trace.walked_slots)
     if session is not None:
         rep.compile_count = session.compile_count()
+    if pool is not None:
+        obs = pool.observables()
+        rep.queue_depth = obs["queue_depth"]
+        rep.admitted = obs["admitted"]
+        rep.evicted = obs["evicted"]
+        rep.drained = obs["drained"]
+        rep.backpressure = obs["backpressure"]
     return rep
 
 

@@ -63,6 +63,20 @@ class RoundRobinSequencer:
         self.lanes[parent].children.append(new_id)
         return new_id
 
+    def ensure_lane(self, lane_id: int, parent: int | None = None) -> bool:
+        """Idempotently register ``lane_id`` — as a root lane (no
+        parent; roots order by id in the post-order traversal) or as a
+        child of ``parent``.  Returns True when the lane was newly
+        created.  The ingress pool uses this to materialize client
+        lanes on first contact without racing an explicit spawn."""
+        if lane_id in self.lanes:
+            return False
+        if parent is None:
+            self.lanes[lane_id] = Lane(lane_id, None)
+        else:
+            self.spawn_lane(parent, lane_id)
+        return True
+
     def stop_lane(self, lane_id: int) -> None:
         self.lanes[lane_id].alive = False
 

@@ -34,6 +34,19 @@ Usage::
     log = session.replay_log()                     # global commit order
     session.compile_count()                        # <= #buckets, not #shapes
 
+**Deterministic ingress** (PR 6): a session can also be fed by an
+:class:`~repro.core.ingress.IngressPool` — the admission + priority-
+drain front-end that *forms* batches from single-transaction arrivals.
+``serve(pool, budget=...)`` drains the pool to empty; the pool's drain
+order is the preordered sequence (the formed batches carry their own
+globally consecutive sequence numbers) and the shape bucket follows the
+pool's occupancy-driven ladder recommendation::
+
+    pool = IngressPool(capacity=4096)
+    for program, lane, fee in arrivals:
+        pool.admit(program, lane=lane, fee=fee)
+    session.serve(pool, budget=64)
+
 The recorded log feeds straight back into a new session for
 record/replay debugging (paper §2.1)::
 
@@ -170,15 +183,17 @@ class PotSession:
         self._bucket_counts: dict[tuple[int, int], int] = {}
 
     # ------------------------------------------------------------- stream
-    def _bucket_shape(self, batch: TxnBatch) -> tuple[int, int]:
+    def _bucket_shape(self, batch: TxnBatch,
+                      ladder: str | None = None) -> tuple[int, int]:
         """The (K, L) step shape a batch runs at: the exact shape when not
-        bucketing, else K rounded up along the session's bucket ladder
-        (pow2, or the denser {1, 2, 4, 8} ∪ 8·n serving ladder) and L to
-        the next power of two."""
+        bucketing, else K rounded up along the bucket ladder (pow2, or
+        the denser {1, 2, 4, 8} ∪ 8·n serving ladder) and L to the next
+        power of two.  ``ladder`` overrides the session default per batch
+        (the ingress pool's occupancy-driven recommendation)."""
         if not self.bucket:
             return batch.n_txns, batch.max_ins
-        return (dense_bucket(batch.n_txns)
-                if self.bucket_ladder == "dense"
+        ladder = ladder if ladder is not None else self.bucket_ladder
+        return (dense_bucket(batch.n_txns) if ladder == "dense"
                 else next_pow2(batch.n_txns)), next_pow2(batch.max_ins)
 
     def submit(self, batch: TxnBatch, lanes: Sequence | None = None
@@ -199,8 +214,21 @@ class PotSession:
         if len(keys) != k:
             raise ValueError(f"batch has {k} txns, got {len(keys)} lanes")
         seq = np.asarray(self.sequencer.order_for(keys), np.int64)
-        lane_ids = self._lane_ids(keys)
-        bk, bl = self._bucket_shape(batch)
+        return self._submit_seq(batch, seq, self._lane_ids(keys))
+
+    def _submit_seq(self, batch: TxnBatch, seq: np.ndarray,
+                    lane_ids: np.ndarray,
+                    ladder: str | None = None) -> ExecTrace:
+        """The core of ``submit`` with the sequence numbers already
+        assigned — the entry point for batch formers that ARE the
+        sequencer (the ingress pool's drain order): ``seq`` ranks the
+        rows, ``lane_ids`` are engine-facing lanes (reduced mod
+        ``n_lanes``), ``ladder`` optionally overrides the session's
+        bucket family for this batch."""
+        k = batch.n_txns
+        seq = np.asarray(seq, np.int64)
+        lane_ids = np.asarray(lane_ids, np.int64) % max(self.n_lanes, 1)
+        bk, bl = self._bucket_shape(batch, ladder)
         self._bucket_counts[(bk, bl)] = \
             self._bucket_counts.get((bk, bl), 0) + 1
         if (bk, bl) != (k, batch.max_ins):
@@ -221,6 +249,38 @@ class PotSession:
         self._n_txns += k
         self.traces.append(trace)
         return trace
+
+    def serve(self, pool, budget: int = 64, *,
+              max_batches: int | None = None,
+              ladder: str | None = None) -> list[ExecTrace]:
+        """Drain an :class:`~repro.core.ingress.IngressPool` through the
+        session until it is empty (or ``max_batches``): the deterministic
+        ingress serve loop.
+
+        Each iteration asks the pool to *form* the next batch
+        (``pool.drain(budget)``) and executes it.  The pool's drain
+        order IS the preordered sequence — the formed batch carries its
+        own globally consecutive sequence numbers, so the session's
+        sequencer is neither consulted nor advanced.  The (K, L) shape
+        bucket follows the pool's occupancy-driven ladder recommendation
+        (``FormedBatch.ladder``) unless ``ladder`` pins one, closing the
+        bucket auto-selection loop: mid-size drain tails steer the step
+        shapes to the dense ladder, pow2-ish drains to pow2 — with
+        bit-identical commits either way (padding is vacant rows).
+
+        Two replica sessions serving pools fed the same arrival journal
+        emit bit-identical stores, fingerprints and ``replay_log()``s
+        for ANY budget schedules that drain the same prefix.
+        """
+        traces: list[ExecTrace] = []
+        while max_batches is None or len(traces) < max_batches:
+            fb = pool.drain(budget)
+            if fb is None:
+                break
+            traces.append(self._submit_seq(
+                fb.batch, fb.seq, fb.lanes,
+                ladder=ladder if ladder is not None else fb.ladder))
+        return traces
 
     def run_stream(self, batches: Iterable[TxnBatch],
                    lanes: Sequence[Sequence] | None = None

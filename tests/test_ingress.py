@@ -1,0 +1,483 @@
+"""Deterministic ingress: admission pool + priority-drain batch former.
+
+Properties (PR 6):
+  I1  Admission: stamps are logical and monotone, per-lane sequence
+      numbers preserve program order, empty programs are rejected (the
+      vacant-row convention is reserved for bucket padding).
+  I2  Drain determinism: the drain order is a pure function of pool
+      state — (priority, lane, lane_seq) with only lane heads eligible —
+      so it matches an independent oracle, preserves per-lane order,
+      is invariant to admission-order permutations within a stamp, and
+      is invariant to how a drain prefix is partitioned into budgets.
+  I3  Capacity: watermark eviction drops worst-priority lane tails
+      deterministically, occupancy never exceeds capacity, and the
+      backpressure signal raises at the configured mark.
+  I4  Journal: replaying the event journal through a fresh pool
+      reproduces the exact FormedBatch stream; the arrival journal fed
+      to replicas draining under different budgets yields bit-identical
+      stores and replay logs through PotSession.
+  I5  serve(): the drain order is the preordered sequence — a served
+      stream equals one big submit of the flat drain order.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (RMW, WRITE, IngressPool, PotSession,
+                        ReplaySequencer)
+from repro.core import workloads as W
+from repro.core.ingress import dense_bucket, programs_from_batch
+from repro.core.txn import next_pow2
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+def _prog(payload: int, addr: int = 0):
+    """A one-write program whose committed value identifies the txn —
+    order-sensitive when programs share ``addr`` (last writer wins)."""
+    return ((WRITE, addr, False, payload),)
+
+
+def _payload(program) -> int:
+    return program[-1][3]
+
+
+def _drain_payloads(pool, budgets):
+    """Flat drained payload sequence under a budget schedule."""
+    out = []
+    for b in budgets:
+        fb = pool.drain(b)
+        if fb is None:
+            break
+        out.extend(_payload(p) for p in programs_from_batch(fb.batch))
+    return out
+
+
+def _oracle_drain(specs, pool_kwargs):
+    """Independent greedy reference: specs = [(lane, fee, program)],
+    admitted in order with auto stamps; returns payload drain order.
+
+    Re-implements the documented rule from scratch: only lane heads are
+    eligible; best head = smallest (-eff_priority, lane, lane_seq) where
+    lane_seq is the per-lane admission index (any per-lane increasing
+    numbering is equivalent inside the key, which only compares seqs
+    within one lane).
+    """
+    p = IngressPool(**pool_kwargs)   # only for the priority knobs
+    latest = len(specs)              # auto stamps: 1..n
+    queues = {}
+    for i, (lane, fee, prog) in enumerate(specs):
+        queues.setdefault(lane, []).append((i, lane, fee, prog))
+    order = []
+    while any(queues.values()):
+        best, best_key = None, None
+        for lane in sorted(queues):
+            if not queues[lane]:
+                continue
+            i, _, fee, prog = queues[lane][0]
+            age = ((latest - (i + 1)) // p.age_unit if p.age_unit > 0
+                   else 0)
+            eff = (fee * p.fee_weight - len(prog) * p.size_weight
+                   + age * p.age_weight)
+            key = (-eff, lane, i)
+            if best_key is None or key < best_key:
+                best_key, best = key, lane
+        order.append(_payload(queues[best].pop(0)[3]))
+    return order
+
+
+# --------------------------------------------------------- admission (I1)
+def test_admit_basic_and_stamps_monotone():
+    pool = IngressPool(capacity=16)
+    r0 = pool.admit(_prog(1), lane=0, fee=2)
+    r1 = pool.admit(_prog(2), lane=0, fee=9)
+    assert r0.admitted and r1.admitted
+    assert r0.txn_id == 0 and r1.txn_id == 1
+    assert r1.stamp > r0.stamp
+    assert pool.depth == 2
+    # explicit stamps: equal OK (a group), regression is an error
+    r2 = pool.admit(_prog(3), lane=1, stamp=r1.stamp)
+    assert r2.stamp == r1.stamp
+    with pytest.raises(ValueError, match="non-decreasing"):
+        pool.admit(_prog(4), lane=1, stamp=r1.stamp - 1)
+
+
+def test_empty_program_rejected():
+    pool = IngressPool(capacity=4)
+    with pytest.raises(ValueError, match="vacant"):
+        pool.admit((), lane=0)
+
+
+def test_stopped_lane_rejects_but_parked_txns_drain():
+    pool = IngressPool(capacity=16)
+    pool.admit(_prog(1), lane=0)
+    pool.admit(_prog(2), lane=0)
+    pool.stop_lane(0)
+    r = pool.admit(_prog(3), lane=0)
+    assert not r.admitted and r.reason == "lane stopped"
+    assert pool.stats.rejected == 1
+    assert _drain_payloads(pool, [8]) == [1, 2]   # program order survives
+
+
+def test_spawn_lane_tree_and_duplicate_guard():
+    pool = IngressPool(capacity=16)
+    pool.spawn_lane(0)
+    pool.spawn_lane(7, parent=0)
+    with pytest.raises(ValueError, match="already exists"):
+        pool.spawn_lane(7)
+    pool.admit(_prog(1), lane=7)
+    assert pool.depth == 1
+
+
+# ----------------------------------------------------- drain order (I2)
+def test_drain_is_priority_order_with_lane_seq_tiebreak():
+    pool = IngressPool(capacity=64, age_unit=0)
+    # fees pick the order; equal fees tie-break by (lane, lane_seq)
+    pool.admit(_prog(10), lane=2, fee=1)
+    pool.admit(_prog(11), lane=1, fee=5)
+    pool.admit(_prog(12), lane=3, fee=5)
+    pool.admit(_prog(13), lane=1, fee=5)
+    assert _drain_payloads(pool, [8]) == [11, 13, 12, 10]
+
+
+def test_per_lane_program_order_preserved():
+    rng = np.random.default_rng(5)
+    pool = IngressPool(capacity=512)
+    lanes_of = {}
+    for i in range(120):
+        lane = int(rng.integers(0, 5))
+        pool.admit(_prog(i), lane=lane, fee=int(rng.integers(0, 6)))
+        lanes_of[i] = lane
+    flat = _drain_payloads(pool, [7] * 64)
+    assert sorted(flat) == list(range(120))
+    for lane in range(5):
+        mine = [p for p in flat if lanes_of[p] == lane]
+        assert mine == sorted(mine)   # admission order within the lane
+
+
+def test_within_stamp_permutation_invariance():
+    """Admitting a group of distinct-lane txns under one stamp in any
+    order drains identically: the drain key never consults arrival
+    interleaving (per-lane order only binds txns of the SAME lane)."""
+    group = [(_prog(100 + i), i, (i * 7) % 4) for i in range(12)]
+    rng = np.random.default_rng(11)
+    ref = None
+    for trial in range(4):
+        pool = IngressPool(capacity=64)
+        pool.admit(_prog(0), lane=0, fee=1)          # pre-existing txn
+        perm = rng.permutation(len(group)) if trial else range(len(group))
+        pool.admit_many([group[j] for j in perm], stamp=5)
+        flat = _drain_payloads(pool, [5] * 8)
+        if ref is None:
+            ref = flat
+        assert flat == ref
+
+
+def test_budget_partition_invariance():
+    """drain(3); drain(5) == drain(8): partitioning a drain prefix into
+    budgets cannot change the flat sequence (the greedy key is pure in
+    pool state and stamps don't advance on drain)."""
+    def fill(pool):
+        rng = np.random.default_rng(23)
+        for i in range(60):
+            pool.admit(_prog(i), lane=int(rng.integers(0, 7)),
+                       fee=int(rng.integers(0, 9)))
+    a, b, c = (IngressPool(capacity=256) for _ in range(3))
+    for p in (a, b, c):
+        fill(p)
+    flat_a = _drain_payloads(a, [60])
+    flat_b = _drain_payloads(b, [3, 5, 8, 13, 21, 34])
+    flat_c = _drain_payloads(c, [1] * 60)
+    assert flat_a == flat_b == flat_c
+    assert sorted(flat_a) == list(range(60))
+
+
+def test_drain_matches_independent_oracle():
+    rng = np.random.default_rng(31)
+    specs = [(int(rng.integers(0, 5)), int(rng.integers(0, 7)),
+              _prog(i, addr=i % 3) * int(rng.integers(1, 4)))
+             for i in range(40)]
+    kwargs = dict(capacity=256, fee_weight=16, age_weight=1, age_unit=8,
+                  size_weight=1)
+    pool = IngressPool(**kwargs)
+    for lane, fee, prog in specs:
+        pool.admit(prog, lane=lane, fee=fee)
+    assert _drain_payloads(pool, [9] * 8) == _oracle_drain(specs, kwargs)
+
+
+def test_age_pressure_promotes_starving_txns():
+    """A parked low-fee txn outranks a fresh higher-fee one once enough
+    logical time (stamps) has passed — anti-starvation, no wall-clock."""
+    kwargs = dict(capacity=512, fee_weight=2, age_weight=1, age_unit=10,
+                  size_weight=0)
+    fresh = IngressPool(**kwargs)
+    fresh.admit(_prog(1), lane=0, fee=0, stamp=1)
+    fresh.admit(_prog(2), lane=1, fee=3, stamp=2)
+    # barely aged: eff(1) = (2-1)//10 = 0 < eff(2) = 6 -> fee wins
+    assert _drain_payloads(fresh, [2]) == [2, 1]
+    aged = IngressPool(**kwargs)
+    aged.admit(_prog(1), lane=0, fee=0, stamp=1)
+    aged.admit(_prog(2), lane=1, fee=3, stamp=100)
+    # starved: eff(1) = (100-1)//10 = 9 > eff(2) = 6 -> age wins
+    assert _drain_payloads(aged, [2]) == [1, 2]
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 5),
+                          st.integers(1, 3)),
+                min_size=1, max_size=40),
+       st.integers(1, 9))
+def test_drain_tiebreak_property(specs_raw, budget):
+    """Hypothesis: drain == oracle for arbitrary (lane, fee, size)
+    mixes and budgets, and per-lane order is always preserved."""
+    specs = [(lane, fee, _prog(100 + i) * size)
+             for i, (lane, fee, size) in enumerate(specs_raw)]
+    kwargs = dict(capacity=1024, age_unit=4)
+    pool = IngressPool(**kwargs)
+    for lane, fee, prog in specs:
+        pool.admit(prog, lane=lane, fee=fee)
+    flat = _drain_payloads(pool, [budget] * len(specs))
+    assert flat == _oracle_drain(specs, kwargs)
+    for lane in {l for l, _, _ in specs}:
+        mine = [p for p in flat
+                if specs[p - 100][0] == lane]
+        assert mine == sorted(mine)
+
+
+# ------------------------------------------- capacity + watermark (I3)
+def test_watermark_eviction_drops_worst_tails():
+    pool = IngressPool(capacity=8, evict_to=6, age_unit=0)
+    for i in range(8):
+        pool.admit(_prog(i), lane=i % 2, fee=5)
+    assert pool.depth == 8
+    r = pool.admit(_prog(99), lane=0, fee=9)      # 9th: evict down to 6
+    assert pool.depth == 6
+    assert r.admitted                              # high fee: it survives
+    assert len(r.evicted) == 3 and pool.stats.evicted == 3
+    # evicted are the worst lane tails (fee 5, latest per-lane seqs):
+    # lane 1 lost 7 then 5 then 3; survivors keep program order, and 99
+    # — despite top priority — drains AFTER its lane-0 predecessors
+    # (only lane heads are eligible: program order beats priority)
+    assert _drain_payloads(pool, [16]) == [0, 2, 4, 6, 99, 1]
+
+
+def test_incoming_txn_can_lose_the_eviction():
+    pool = IngressPool(capacity=4, evict_to=4, age_unit=0)
+    for i in range(4):
+        pool.admit(_prog(i), lane=0, fee=9)
+    r = pool.admit(_prog(99), lane=1, fee=0)       # worst of the five
+    assert not r.admitted and r.evicted == (r.txn_id,)
+    assert r.reason == "evicted at admission"
+    assert pool.depth == 4
+    assert 99 not in _drain_payloads(pool, [8])
+
+
+def test_depth_never_exceeds_capacity_and_backpressure_signal():
+    pool = IngressPool(capacity=16, evict_to=12, backpressure_at=10)
+    saw_bp = False
+    for i in range(40):
+        assert pool.depth <= pool.capacity
+        r = pool.admit(_prog(i), lane=i % 3, fee=i % 5)
+        saw_bp |= r.backpressure
+    assert pool.depth <= pool.capacity
+    assert saw_bp and pool.backpressure
+    assert pool.stats.backpressure_admits > 0
+    assert pool.observables()["backpressure"] == 1
+
+
+def test_eviction_is_deterministic_across_replicas():
+    def run():
+        pool = IngressPool(capacity=12, evict_to=9)
+        rng = np.random.default_rng(7)
+        for i in range(50):
+            pool.admit(_prog(i), lane=int(rng.integers(0, 4)),
+                       fee=int(rng.integers(0, 8)))
+        return _drain_payloads(pool, [4] * 8), pool.stats.evicted
+    (flat_a, ev_a), (flat_b, ev_b) = run(), run()
+    assert flat_a == flat_b and ev_a == ev_b and ev_a > 0
+
+
+# -------------------------------------------------------- journal (I4)
+def _interleaved_pool():
+    pool = IngressPool(capacity=24, evict_to=18)
+    rng = np.random.default_rng(13)
+    formed = []
+    pool.spawn_lane(0)
+    pool.spawn_lane(1)
+    for step in range(6):
+        if step == 2:
+            pool.spawn_lane(5, parent=0)          # lane joins mid-stream
+        if step == 4:
+            pool.stop_lane(1)                     # lane leaves mid-stream
+        for i in range(8):
+            pool.admit(_prog(100 * step + i),
+                       lane=int(rng.integers(0, 2)) if step < 2 else
+                       int(rng.choice([0, 1, 5])),
+                       fee=int(rng.integers(0, 6)))
+        fb = pool.drain(int(rng.integers(3, 9)))
+        if fb is not None:
+            formed.append(fb)
+    formed.extend(pool.drain_all(16))
+    return pool, formed
+
+
+def test_journal_replay_reproduces_formed_batches_exactly():
+    pool, formed = _interleaved_pool()
+    replayed_pool, replayed = IngressPool.replay(pool.journal())
+    assert len(replayed) == len(formed)
+    for a, b in zip(formed, replayed):
+        np.testing.assert_array_equal(a.txn_ids, b.txn_ids)
+        np.testing.assert_array_equal(a.seq, b.seq)
+        np.testing.assert_array_equal(a.lanes, b.lanes)
+        np.testing.assert_array_equal(a.stamps, b.stamps)
+        assert a.ladder == b.ladder
+        assert programs_from_batch(a.batch) == programs_from_batch(b.batch)
+    assert replayed_pool.depth == pool.depth
+    # rejected admissions are non-events (never journaled), so they are
+    # the one observable a replay cannot — and need not — reproduce
+    obs_a, obs_b = pool.observables(), replayed_pool.observables()
+    obs_a.pop("rejected"), obs_b.pop("rejected")
+    assert obs_a == obs_b
+    # the replayed pool's journal is the original journal
+    assert replayed_pool.journal() == pool.journal()
+
+
+def test_journal_requires_config_head():
+    pool, _ = _interleaved_pool()
+    with pytest.raises(ValueError, match="config"):
+        IngressPool.replay(pool.journal()[1:])
+
+
+def test_two_replicas_same_arrivals_different_budgets_bitwise():
+    """The acceptance property: replicas fed the same arrival journal,
+    drained under different budget schedules covering the same (full)
+    prefix, produce bit-identical stores and replay logs through
+    PotSession.  Programs write distinct values to a shared address, so
+    any order divergence would flip the fingerprint."""
+    src = IngressPool(capacity=256)
+    rng = np.random.default_rng(17)
+    for i in range(48):
+        src.admit(((RMW, int(rng.integers(0, 8)), False, i),
+                   (WRITE, int(rng.integers(0, 8)), False, 1000 + i)),
+                  lane=int(rng.integers(0, 6)), fee=int(rng.integers(0, 9)))
+    arrivals = src.arrival_journal()
+    results = []
+    for budgets in ([48], [5, 9, 3, 31], [7] * 7):
+        pool, _ = IngressPool.replay(arrivals)
+        session = PotSession(16, engine="pcc", n_lanes=6)
+        n = 0
+        for b in budgets:
+            fb = pool.drain(b)
+            if fb is None:
+                break
+            session._submit_seq(fb.batch, fb.seq, fb.lanes,
+                                ladder=fb.ladder)
+            n += fb.n_txns
+        assert n == 48 and pool.depth == 0
+        results.append((session.fingerprint(), session.replay_log()))
+    assert results[0] == results[1] == results[2]
+
+
+# ---------------------------------------------------------- serve (I5)
+def test_serve_equals_flat_submit_of_drain_order():
+    wl = W.counters(n_txns=30, n_objects=32, n_reads=2, n_writes=2,
+                    n_lanes=4, skew=0.8, seed=9)
+    progs = programs_from_batch(wl.batch)
+    rng = np.random.default_rng(2)
+    fees = [int(rng.integers(0, 5)) for _ in progs]
+
+    pool = IngressPool(capacity=64)
+    for p, lane, fee in zip(progs, wl.lanes.tolist(), fees):
+        pool.admit(p, lane=lane, fee=fee)
+    # the flat drain order, from an identically-fed twin
+    twin, _ = IngressPool.replay(pool.arrival_journal())
+    fb = twin.drain(64)
+    assert fb.n_txns == 30
+
+    served = PotSession(32, engine="pcc", n_lanes=4)
+    traces = served.serve(pool, budget=11)
+    assert len(traces) == 3 and pool.depth == 0
+    # one big submit of the drain order == the served stream
+    flat = PotSession(32, engine="pcc", n_lanes=4,
+                      sequencer=ReplaySequencer(
+                          np.argsort(fb.seq, kind="stable").tolist()))
+    flat.submit(fb.batch, fb.lanes.tolist())
+    assert flat.fingerprint() == served.fingerprint()
+    assert served.n_txns == 30
+
+
+def test_serve_max_batches_and_empty_pool():
+    pool = IngressPool(capacity=16)
+    session = PotSession(8, engine="pcc")
+    assert session.serve(pool, budget=4) == []      # empty pool: no-op
+    for i in range(10):
+        pool.admit(_prog(i, addr=i % 8), lane=0, fee=0)
+    traces = session.serve(pool, budget=4, max_batches=2)
+    assert len(traces) == 2 and pool.depth == 2
+
+
+def test_occupancy_driven_ladder_selection():
+    # mid-size tails (pow2 waste >= 2x dense waste) steer to dense
+    pool = IngressPool(capacity=2048)
+    for i in range(33 * 4):
+        pool.admit(_prog(i), lane=0, fee=0)
+    for fb in pool.drain_all(33):                  # 33 pads to 64 vs 40
+        assert fb.ladder == "dense"
+    assert next_pow2(33) - 33 >= 2 * (dense_bucket(33) - 33)
+    # pow2-sized drains stay pow2 (zero waste either way)
+    pool2 = IngressPool(capacity=2048)
+    for i in range(64 * 3):
+        pool2.admit(_prog(i), lane=0, fee=0)
+    for fb in pool2.drain_all(64):
+        assert fb.ladder == "pow2"
+
+
+def test_serve_uses_ladder_recommendation_in_bucket_counts():
+    pool = IngressPool(capacity=2048)
+    for i in range(33):
+        pool.admit(_prog(i, addr=i % 16), lane=0, fee=0)
+    session = PotSession(16, engine="pcc")
+    session.serve(pool, budget=33)
+    assert (40, 1) in session.bucket_counts()      # dense bucket, not 64
+    # pinning the ladder overrides the recommendation
+    pool2, _ = IngressPool.replay(pool.arrival_journal())
+    session2 = PotSession(16, engine="pcc")
+    session2.serve(pool2, budget=33, ladder="pow2")
+    assert (64, 1) in session2.bucket_counts()
+    assert session.fingerprint() == session2.fingerprint()
+
+
+# ------------------------------------------------- hygiene + metrics
+def test_no_wall_clock_or_rng_in_ingress_module():
+    """The no-wall-clock rule, mechanically: the ingress module must not
+    import time/random sources — all ordering is logical."""
+    import inspect
+
+    import repro.core.ingress as ingress
+    src = inspect.getsource(ingress)
+    for needle in ("import time", "import random", "datetime",
+                   "perf_counter", "default_rng"):
+        assert needle not in src, needle
+
+
+def test_metrics_csv_carries_ingress_observables():
+    from repro.core import make_store, run_all
+    from repro.core import metrics as M
+
+    wl = W.counters(n_txns=12, n_objects=32, n_lanes=4, seed=4)
+    pool = IngressPool(capacity=64)
+    for p, lane in zip(programs_from_batch(wl.batch), wl.lanes.tolist()):
+        pool.admit(p, lane=lane, fee=1)
+    session = PotSession(32, engine="pcc", n_lanes=4)
+    fb = pool.drain(12)
+    trace = session._submit_seq(fb.batch, fb.seq, fb.lanes,
+                                ladder=fb.ladder)
+    res = run_all(fb.batch, make_store(32).values)
+    rep = M.report_from_trace("pcc", trace, fb.batch,
+                              np.asarray(res.rn), np.asarray(res.wn),
+                              session=session, pool=pool)
+    assert rep.admitted == 12 and rep.drained == 12
+    assert rep.queue_depth == 0 and rep.evicted == 0
+    row = rep.row()
+    assert len(row.split(",")) == len(M.HEADER.split(","))

@@ -215,6 +215,39 @@ def test_session_lane_count_mismatch():
         s.submit(batch, lanes=[0, 1])
 
 
+def test_round_robin_spawn_and_stop_mid_stream():
+    """Elastic scaling (paper §2.1): lanes joining and leaving between
+    batches change the round-robin schedule deterministically — the
+    spawned lane slots in post-order *before* its parent, the stopped
+    lane drops out of the refill — and the resulting commit order
+    round-trips through record/replay."""
+    seqr = RoundRobinSequencer(n_root_lanes=2)
+    s = PotSession(4, engine="pcc", sequencer=seqr)
+    b1 = make_batch([[(WRITE, i % 2, False, 10 + i)] for i in range(6)])
+    s.submit(b1, lanes=[0, 1, 0, 1, 0, 1])
+    assert s.replay_log() == [0, 1, 2, 3, 4, 5]
+
+    seqr.spawn_lane(0, 2)              # child of 0: post-order [2, 0, 1]
+    assert seqr.lane_order() == [2, 0, 1]
+    b2 = make_batch([[(WRITE, 0, False, 20 + i)] for i in range(3)])
+    s.submit(b2, lanes=[0, 1, 2])      # seqs (8, 9, 7): lane 2 first
+    assert s.replay_log()[6:] == [8, 6, 7]
+
+    seqr.stop_lane(1)                  # refill stops feeding lane 1
+    assert seqr.lane_order() == [2, 0]
+    b3 = make_batch([[(WRITE, 1, False, 30 + i)] for i in range(2)])
+    s.submit(b3, lanes=[0, 2])         # seqs (11, 10): lane 2 still first
+    assert s.replay_log()[9:] == [10, 9]
+    assert int(s.store.values[0, 0]) == 21   # last lane-0 write of b2
+    assert int(s.store.values[1, 0]) == 30   # lane-0 write of b3
+
+    replay = PotSession(4, engine="pcc",
+                        sequencer=ReplaySequencer(s.replay_log()))
+    replay.run_stream([b1, b2, b3])
+    assert replay.fingerprint() == s.fingerprint()
+    assert replay.replay_log() == s.replay_log()
+
+
 def test_round_robin_unknown_or_stopped_lane_raises():
     """The sequencer must raise, not spin forever, for a lane its refill
     loop will never feed (paper §2.1's hang, surfaced as an error)."""
