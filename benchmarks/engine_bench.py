@@ -55,6 +55,19 @@ One PR 6 section:
   pow2 ladder (compile counts + padding waste, fingerprints asserted
   bit-identical).
 
+One PR 7 section:
+
+* pipeline (axis="pipeline"): cross-batch speculative pipelining —
+  a PotSession with ``pipeline_depth=D`` executes batch n+1 against
+  the pre-state snapshot while batch n commits, then validates n+1's
+  logged read sets against n's committed writes (``versions >
+  snap_gv`` via the rectangular conflict-strip kernels) and
+  re-executes only invalidated rows.  Serial (D=0) vs D in {1, 2}
+  stream throughput per engine × K × contention, with speculation
+  observables (spec_executed / spec_invalidated / spec_rounds) per
+  row; every pipelined stream is asserted bit-identical to the serial
+  one (fingerprints + replay logs + full traces).
+
 ``--shard-smoke`` (scripts/ci.sh --shard-smoke): asserts sharded ==
 dense store fingerprints and traces across engines at S in {1, 2, 8},
 and — when the host exposes multiple devices
@@ -65,6 +78,13 @@ per-device write-back path on a real mesh.
 IngressPool replicas fed the same arrival journal agree bitwise —
 fingerprints + replay logs — across different drain budget schedules,
 and that a full journal replay reproduces the formed batch stream.
+
+``--pipeline-smoke`` (scripts/ci.sh --pipeline-smoke): replays one
+ingress arrival journal through a serial session and pipelined
+sessions (D in {1, 2}, engines pcc + occ) under different drain
+budget schedules and asserts bitwise equality — fingerprints, replay
+logs, and every pre-existing ExecTrace field (speculation cost may
+only appear in the new spec_* observables).
 
 ``--smoke`` (scripts/ci.sh --bench-smoke): tiny K, asserts the four
 implementations' store fingerprints and commit positions are bitwise
@@ -278,6 +298,7 @@ def run_bench(ks, contentions, iters: int) -> dict:
     ragged_stream_bench(results)
     shard_sweep(iters, results)
     ingress_bench(iters, results)
+    pipeline_bench(iters, results)
     return dict(results=results)
 
 
@@ -530,6 +551,78 @@ def ingress_bench(iters: int, results: list, k: int = 256,
               f"compiles={s.compile_count()} padding_waste={waste}")
     assert fps["auto"] == fps["pow2"], (
         "bucket-ladder choice changed committed state")
+
+
+def _pipeline_stream(k: int, cont: str, n_batches: int = 8,
+                     seed: int = 43):
+    """A stream of same-contention batches sharing one hot set — the
+    regime where cross-batch validation actually has conflicts to
+    find.  Every batch gets the SAME n_objects (one store) but a
+    distinct seed, so consecutive batches collide on the skewed head
+    of the address space at med contention and are near-disjoint at
+    low."""
+    wls = [_workload(k, cont, seed=seed + i) for i in range(n_batches)]
+    return (wls[0].n_objects, wls[0].n_lanes,
+            [w.batch for w in wls], [w.lanes for w in wls])
+
+
+def pipeline_bench(iters: int, results: list, ks=(64, 256),
+                   depths=(1, 2)) -> None:
+    """PR 7 pipeline axis: serial (D=0) vs speculative pipeline depth
+    D in {1, 2} stream throughput for the seeded engines (pcc, occ),
+    K × contention.  Every pipelined stream is asserted bit-identical
+    to the serial one — fingerprints, replay logs, full traces — so
+    the rows measure the cost/benefit of speculation, never a
+    semantics change.  Rows carry the speculation observables: rows
+    executed against the pre-state snapshot, rows invalidated by the
+    cross-batch read-set check, and re-execution passes."""
+    from repro.core import PotSession
+
+    for k in ks:
+        for cont in ("low", "med"):
+            n_obj, n_lanes, batches, lanes = _pipeline_stream(k, cont)
+            total = k * len(batches)
+            base = {}
+            for engine in ("pcc", "occ"):
+                for depth in (0,) + tuple(depths):
+                    def stream():
+                        s = PotSession(n_obj, engine=engine,
+                                       n_lanes=n_lanes,
+                                       pipeline_depth=depth)
+                        ts = s.run_stream(batches, lanes)
+                        jax.block_until_ready(s.store.values)
+                        return s, ts
+                    secs = timeit(lambda: stream(), warmup=1,
+                                  iters=iters)
+                    s, traces = stream()
+                    if depth == 0:
+                        base[engine] = s
+                    else:
+                        sb = base[engine]
+                        assert s.fingerprint() == sb.fingerprint(), (
+                            f"pipeline {engine} K={k} {cont} D={depth}: "
+                            "fingerprint diverged from serial")
+                        assert s.replay_log() == sb.replay_log(), (
+                            f"pipeline {engine} K={k} {cont} D={depth}: "
+                            "replay log diverged from serial")
+                    spec_exec = sum(int(t.spec_executed) for t in traces)
+                    spec_inv = sum(int(t.spec_invalidated)
+                                   for t in traces)
+                    spec_rounds = sum(int(t.spec_rounds) for t in traces)
+                    results.append(dict(
+                        engine=engine, k=k, impl=f"depth{depth}",
+                        axis="pipeline", L=batches[0].max_ins, slot=1,
+                        n_lanes=n_lanes, contention=cont,
+                        pipeline_depth=depth, n_batches=len(batches),
+                        seconds=round(secs, 6),
+                        txns_per_sec=round(total / secs, 1),
+                        spec_executed=spec_exec,
+                        spec_invalidated=spec_inv,
+                        spec_rounds=spec_rounds))
+                    print(f"{engine:6s} K={k:<5d} {cont:4s} pipeline "
+                          f"D={depth}  {secs * 1e3:9.2f} ms  "
+                          f"{total / secs:12.1f} txn/s  "
+                          f"spec={spec_exec}/inv={spec_inv}")
 
 
 def summarize(results) -> dict:
@@ -792,6 +885,94 @@ def run_ingress_smoke() -> None:
           f"the {len(formed)}-batch formed stream exactly")
 
 
+def run_pipeline_smoke() -> None:
+    """CI gate (scripts/ci.sh --pipeline-smoke): one ingress arrival
+    journal replayed through a serial session and pipelined sessions
+    (D in {1, 2}) for both seeded engines, under different drain budget
+    schedules, must agree bitwise — store fingerprints, replay logs,
+    and every pre-existing ExecTrace field (the speculation cost may
+    only surface in the new spec_* observables, which must be zero on
+    the serial run).  Also covers the ragged direct-stream path and the
+    blocked OCC wave solve (wave_trips must drop, decisions must not
+    change)."""
+    import dataclasses
+
+    from repro.core import IngressPool, PotSession, occ_execute
+    from repro.core.engine import ExecTrace
+
+    wl = _workload(48, "med", seed=13)
+    rng = np.random.default_rng(7)
+    arrivals = _fill_pool(wl, rng.integers(0, 9, 48).tolist(),
+                          capacity=64).arrival_journal()
+    for engine in ("pcc", "occ"):
+        per_budget = []
+        for budget in (48, 13, 7):   # three drain partitions
+            runs = {}
+            for depth in (0, 1, 2):
+                pool, _ = IngressPool.replay(arrivals)
+                s = PotSession(wl.n_objects, engine=engine,
+                               n_lanes=wl.n_lanes, pipeline_depth=depth)
+                ts = s.serve(pool, budget=budget)
+                assert pool.depth == 0, "serve left txns behind"
+                runs[depth] = (s, ts)
+            s0, t0 = runs[0]
+            for depth in (1, 2):
+                s, ts = runs[depth]
+                assert s.fingerprint() == s0.fingerprint(), (
+                    f"pipeline-smoke {engine} budget={budget} "
+                    f"D={depth}: fingerprint diverged from serial")
+                assert s.replay_log() == s0.replay_log(), (
+                    f"pipeline-smoke {engine} budget={budget} "
+                    f"D={depth}: replay log diverged from serial")
+                assert len(ts) == len(t0)
+                for i, (a, b) in enumerate(zip(t0, ts)):
+                    for f in dataclasses.fields(ExecTrace):
+                        if f.name.startswith("spec_"):
+                            assert int(np.asarray(
+                                getattr(a, f.name)).sum()) == 0, (
+                                f"serial run charged {f.name}")
+                            continue
+                        assert np.array_equal(
+                            np.asarray(getattr(a, f.name)),
+                            np.asarray(getattr(b, f.name))), (
+                            f"pipeline-smoke {engine} budget={budget} "
+                            f"D={depth}: trace field {f.name!r} "
+                            f"diverged on batch {i}")
+            per_budget.append((s0.fingerprint(), s0.replay_log()))
+        # Budget-partition invariance holds at any pipeline depth
+        # because it holds serially and pipelined == serial above.
+        # PCC-only (matching --ingress-smoke): OCC's retry waves are
+        # batch-scoped — a conflicting txn re-runs in a later wave of
+        # ITS batch — so the baseline's commit order legitimately
+        # depends on how the drain prefix is partitioned.
+        if engine == "pcc":
+            assert per_budget[0] == per_budget[1] == per_budget[2], (
+                f"pipeline-smoke {engine}: drain partitions diverged")
+    # ragged direct stream (run_stream path) + blocked wave solve
+    n_obj, n_lanes, batches, lanes = _pipeline_stream(32, "med",
+                                                      n_batches=5)
+    s0 = PotSession(n_obj, engine="pcc", n_lanes=n_lanes)
+    s0.run_stream(batches, lanes)
+    s2 = PotSession(n_obj, engine="pcc", n_lanes=n_lanes,
+                    pipeline_depth=2)
+    s2.run_stream(batches, lanes)
+    assert s0.fingerprint() == s2.fingerprint()
+    assert s0.replay_log() == s2.replay_log()
+    wlc = _workload(64, "med", seed=23)
+    arrival = jnp.argsort(_seq_for(wlc))
+    store = make_store(wlc.n_objects)
+    out1, tr1 = occ_execute(store, wlc.batch, arrival, wave_block=1)
+    out8, tr8 = occ_execute(store, wlc.batch, arrival, wave_block=8)
+    _assert_equal("occ", 64, "med", out1, tr1, out8, tr8,
+                  pair=("block1", "block8"))
+    assert int(tr8.wave_trips) <= int(tr1.wave_trips)
+    print("pipeline-smoke OK: pipelined (D in {1, 2}) == serial on one "
+          "arrival journal across drain budgets (48, 13, 7) — "
+          "fingerprints + replay logs + full traces (engines: pcc, "
+          "occ) — and the blocked OCC wave solve is decision-identical "
+          f"(trips {int(tr1.wave_trips)} -> {int(tr8.wave_trips)})")
+
+
 def run() -> None:
     """benchmarks/run.py entry point: one incremental-vs-rebuild-vs-
     compact row per engine at K=256 low contention, a shards row
@@ -863,6 +1044,28 @@ def run() -> None:
          f"direct_over_serve={t_direct / t_serve:.2f}x;"
          f"batches={len(formed)};budget=24;"
          f"ladder={formed[0].ladder}")
+    # cross-batch speculative pipeline: serial vs D=2 on one stream
+    n_obj, n_lanes, batches3, lanes3 = _pipeline_stream(
+        128, "med", n_batches=6)
+
+    def pipe_stream(depth):
+        s = PotSession(n_obj, engine="pcc", n_lanes=n_lanes,
+                       pipeline_depth=depth)
+        ts = s.run_stream(batches3, lanes3)
+        jax.block_until_ready(s.store.values)
+        return s, ts
+
+    s_ser, _ = pipe_stream(0)
+    t_ser = timeit(lambda: pipe_stream(0), warmup=1, iters=3)
+    t_pipe = timeit(lambda: pipe_stream(2), warmup=1, iters=3)
+    s_pipe, traces = pipe_stream(2)
+    assert s_pipe.fingerprint() == s_ser.fingerprint()
+    emit("engine_bench_pipeline_k128_med_d2", t_pipe * 1e6,
+         f"serial_over_pipelined={t_ser / t_pipe:.2f}x;"
+         f"spec_executed={sum(int(t.spec_executed) for t in traces)};"
+         f"spec_invalidated="
+         f"{sum(int(t.spec_invalidated) for t in traces)};"
+         f"bitwise_equal=1")
 
 
 def main() -> None:
@@ -883,6 +1086,11 @@ def main() -> None:
                          "agree bitwise across drain budget schedules "
                          "and that journal replay reproduces the formed "
                          "batch stream")
+    ap.add_argument("--pipeline-smoke", action="store_true",
+                    help="assert pipelined sessions (D in {1, 2}) == "
+                         "serial on one arrival journal across drain "
+                         "budgets — fingerprints, replay logs and full "
+                         "traces — plus the blocked OCC wave solve")
     ap.add_argument(
         "--out",
         default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -904,6 +1112,9 @@ def main() -> None:
         return
     if args.ingress_smoke:
         run_ingress_smoke()
+        return
+    if args.pipeline_smoke:
+        run_pipeline_smoke()
         return
 
     ks = (64, 256, 1024)
@@ -932,7 +1143,15 @@ def main() -> None:
              "scatters, decisions in rank space) — bit-identical to "
              "S=1 by assertion; fused_write_back rows time the "
              "primitive that runs one-scatter-per-device under a "
-             "shard_map mesh.",
+             "shard_map mesh.  axis=pipeline: cross-batch speculative "
+             "pipelining — PotSession(pipeline_depth=D) executes batch "
+             "n+1 against the pre-state snapshot while batch n "
+             "commits, validates its logged read sets against "
+             "committed writes (versions > snap_gv, rank-space strip "
+             "kernels) and re-executes only invalidated rows; rows "
+             "carry spec_executed / spec_invalidated / spec_rounds "
+             "and every pipelined stream is asserted bit-identical "
+             "to serial.",
         commit_steps_model="scan: K sequential device steps per round; "
                            "rebuild/incremental: ceil(log2 K) + 3 batched "
                            "stages (PCC/DeSTM; OCC: conflict-chain depth, "

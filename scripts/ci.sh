@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [--pipeline-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
 # the test suite: it executes every engine through the preserved legacy
@@ -31,6 +31,15 @@
 # fingerprints + replay logs — and a full journal replay reproduces the
 # formed batch stream exactly (the deterministic-ingress gate).
 #
+# --pipeline-smoke runs benchmarks/engine_bench.py --pipeline-smoke: one
+# PR7 arrival journal replayed through a serial session and pipelined
+# sessions (pipeline_depth in {1, 2}, engines pcc + occ) under
+# different drain budgets agrees bitwise — fingerprints, replay logs
+# AND every pre-existing ExecTrace field (speculation cost may only
+# appear in the new spec_* observables) — plus the blocked OCC wave
+# solve is decision-identical with fewer while_loop trips (the
+# cross-batch speculation equivalence gate).
+#
 # Stages do NOT short-circuit each other: every requested stage runs and
 # the script exits non-zero if ANY stage failed (the last failing stage's
 # exit code is propagated).
@@ -43,6 +52,7 @@ INCREMENTAL_SMOKE=0
 COMPACT_SMOKE=0
 SHARD_SMOKE=0
 INGRESS_SMOKE=0
+PIPELINE_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
   case "$arg" in
@@ -51,6 +61,7 @@ for arg in "$@"; do
     --compact-smoke) COMPACT_SMOKE=1 ;;
     --shard-smoke) SHARD_SMOKE=1 ;;
     --ingress-smoke) INGRESS_SMOKE=1 ;;
+    --pipeline-smoke) PIPELINE_SMOKE=1 ;;
     *) PYTEST_ARGS+=("$arg") ;;
   esac
 done
@@ -92,6 +103,10 @@ fi
 
 if [[ "$INGRESS_SMOKE" == "1" ]]; then
   run_stage ingress-smoke python benchmarks/engine_bench.py --ingress-smoke
+fi
+
+if [[ "$PIPELINE_SMOKE" == "1" ]]; then
+  run_stage pipeline-smoke python benchmarks/engine_bench.py --pipeline-smoke
 fi
 
 exit "$FAIL"

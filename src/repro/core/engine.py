@@ -79,6 +79,16 @@ class ExecTrace:
     live_per_round: jax.Array  # (R,) int32 — live count per round, -1 pad
     #   (R = the engine's static round limit; entries past `rounds` stay
     #    -1.  Engines predating the RoundState loop leave it empty.)
+    # -- cross-batch speculation observables (PR 7).  Zero on the serial
+    #    path; every OTHER field is bit-identical between a pipelined and
+    #    a serial run of the same stream (the pipelining invariant) — the
+    #    speculation cost shows up ONLY here.
+    spec_executed: jax.Array     # () int32 — rows executed against the
+    #   pre-state snapshot before this batch's turn (the overlap work)
+    spec_invalidated: jax.Array  # () int32 — speculated rows whose read
+    #   set hit a post-snapshot write and were re-executed
+    spec_rounds: jax.Array       # () int32 — revalidation re-execution
+    #   passes (0 when the whole speculation survived)
 
     @property
     def n_txns(self) -> int:
@@ -118,6 +128,9 @@ def make_trace(k: int, **overrides) -> ExecTrace:
         live_slots=jnp.zeros((), jnp.int32),
         walked_slots=jnp.zeros((), jnp.int32),
         live_per_round=jnp.zeros((0,), jnp.int32),
+        spec_executed=jnp.zeros((), jnp.int32),
+        spec_invalidated=jnp.zeros((), jnp.int32),
+        spec_rounds=jnp.zeros((), jnp.int32),
     )
     fields.update(overrides)
     return ExecTrace(**fields)
@@ -162,12 +175,23 @@ class EngineDef:
     ``raw(store, batch, seq, lanes, n_lanes)`` must be jit-compatible
     with ``n_lanes`` static; :class:`~repro.core.session.PotSession`
     re-jits it with donated store buffers.
+
+    ``raw_spec(store, batch, seq, lanes, n_lanes, seed)`` is the
+    seeded twin behind cross-batch speculative pipelining: ``seed`` is
+    a :class:`~repro.core.protocol.SpecSeed` (footprints + results of a
+    speculative execution against an earlier store snapshot); the
+    engine validates it against the current store, re-executes only
+    the invalidated rows, and must produce a store and trace
+    bit-identical to ``raw`` on the same inputs (only the ``spec_*``
+    trace fields differ from zero).  ``None`` when the engine has no
+    seeded path — ``PotSession`` then falls back to the serial step.
     """
 
     name: str
     raw: Callable[[TStore, TxnBatch, jax.Array, jax.Array, int],
                   tuple[TStore, ExecTrace]]
     doc: str = ""
+    raw_spec: Callable | None = None
 
     def __post_init__(self):
         object.__setattr__(

@@ -169,9 +169,15 @@ def _pcc_execute_scan(store: TStore, batch: TxnBatch, seq: jax.Array,
 
 def _occ_execute_scan(store: TStore, batch: TxnBatch, arrival: jax.Array,
                       max_waves: int | None = None) -> tuple[TStore, ExecTrace]:
-    """Scan-based OCC wave: per-txn probe, arrival order, no prefix rule."""
+    """Scan-based OCC wave: per-txn probe, arrival order, no prefix rule.
+
+    Version stamps are gv-rebased (gv0 + commit position + 1, matching
+    repro.core.occ) so they stay globally monotone across batches —
+    identical on the single-batch gv=0 stores every equivalence test
+    uses, required for the cross-batch dirty predicate (PR 7)."""
     k = batch.n_txns
     n_obj = store.n_objects
+    gv0 = store.gv
 
     def wave_body(state):
         values, versions, done, n_comm, wave, tr = state
@@ -203,7 +209,7 @@ def _occ_execute_scan(store: TStore, batch: TxnBatch, arrival: jax.Array,
                 v, ve = args
                 return protocol.apply_writes(
                     v, ve, res.waddrs[t], res.wvals[t], res.wn[t],
-                    commit_idx[p] + 1)
+                    gv0 + commit_idx[p] + 1)
 
             vals, vers = jax.lax.cond(
                 committing_pos[p], do, lambda a: a, (vals, vers))

@@ -57,6 +57,12 @@ class EngineReport:
     evicted: int = 0         # watermark evictions so far
     drained: int = 0         # transactions formed into batches so far
     backpressure: int = 0    # 1 when the pool's backpressure signal is up
+    # -- cross-batch speculation observables (PR 7): nonzero only for
+    #    batches executed through a pipelined session ------------------
+    spec_executed: int = 0   # rows executed against the pre-state snapshot
+    spec_invalidated: int = 0  # speculated rows re-executed (stale reads)
+    spec_rounds: int = 0     # revalidation re-execution passes (0 or 1)
+    pipeline_depth: int = 0  # the session's speculation window depth
 
     def row(self) -> str:
         return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
@@ -65,13 +71,16 @@ class EngineReport:
                 f"{self.throughput:.5f},{self.wave_trips},{self.live_txns},"
                 f"{self.walked_slots},{self.compile_count},"
                 f"{self.queue_depth},{self.admitted},{self.evicted},"
-                f"{self.drained},{self.backpressure}")
+                f"{self.drained},{self.backpressure},{self.spec_executed},"
+                f"{self.spec_invalidated},{self.spec_rounds},"
+                f"{self.pipeline_depth}")
 
 
 HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
           "fast_commits,prefix_commits,throughput,wave_trips,live_txns,"
           "walked_slots,compile_count,queue_depth,admitted,evicted,"
-          "drained,backpressure")
+          "drained,backpressure,spec_executed,spec_invalidated,"
+          "spec_rounds,pipeline_depth")
 
 
 def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
@@ -114,8 +123,14 @@ def report_from_trace(name: str, trace, batch, res_rn, res_wn,
         raise KeyError(f"no report model for engine {name!r}")
     if trace is not None:
         rep.walked_slots = int(trace.walked_slots)
+        # PR 7 speculation observables (zero for serial runs and for
+        # legacy traces, whose make_trace defaults them)
+        rep.spec_executed = int(trace.spec_executed)
+        rep.spec_invalidated = int(trace.spec_invalidated)
+        rep.spec_rounds = int(trace.spec_rounds)
     if session is not None:
         rep.compile_count = session.compile_count()
+        rep.pipeline_depth = int(getattr(session, "pipeline_depth", 0))
     if pool is not None:
         obs = pool.observables()
         rep.queue_depth = obs["queue_depth"]

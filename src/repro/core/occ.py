@@ -39,7 +39,10 @@ OccTrace = ExecTrace
 def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
                  max_waves: int | None = None,
                  incremental: bool = True,
-                 compact: bool = True) -> tuple[TStore, ExecTrace]:
+                 compact: bool = True,
+                 wave_block: int = 8,
+                 seed: "protocol.SpecSeed | None" = None
+                 ) -> tuple[TStore, ExecTrace]:
     """arrival: (K,) permutation — arrival[p] = txn reaching commit p-th.
 
     ``incremental``: re-execute only the not-yet-committed transactions
@@ -54,12 +57,24 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
     loop.  Rows with ``n_ins == 0`` are *vacant* (bucket padding): never
     pending, never committed, no ``gv`` advance (their arrival positions
     must sort after every real row's).
+
+    ``wave_block``: unroll B conflict queries per ``wave_commit``
+    `while_loop` trip (the blocked fixpoint solve) — cuts
+    ``ExecTrace.wave_trips`` by ~B on deep conflict chains, provably
+    decision-identical for any B (see :func:`protocol.wave_commit`).
+
+    ``seed``: optional :class:`protocol.SpecSeed` — the cross-batch
+    speculative round-0 execution re-based onto the current store by
+    ``protocol.seed_round_state`` (see :mod:`repro.core.pcc`); the
+    store and every pre-existing trace field stay bit-identical to the
+    unseeded call.
     """
     k = batch.n_txns
     layout = store.layout     # static: dense or S contiguous range shards
     n_obj = layout.n_objects
     # arrival rank of each txn: one argsort's inverse, computed once
     rank = rank_from_order(arrival)
+    gv0 = store.gv
     real = batch.n_ins > 0     # vacant rows (bucket padding) never commit
 
     def wave_body_at(width: int):
@@ -72,24 +87,40 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
             # below it) + carried conflict table --------------------------
             pending_t = ~done
             live = pending_t if incremental else jnp.ones((k,), bool)
-            if full:
-                rs = protocol.refresh_round_state(rs, batch, live, layout)
+
+            def refresh(r):
+                if full:
+                    return protocol.refresh_round_state(r, batch, live,
+                                                        layout)
+                return protocol.refresh_round_state_compact(
+                    r, batch, live, width, layout)[0]
+
+            if seeded:
+                # wave 0's read phase already ran speculatively and was
+                # re-based onto this store by seed_round_state — charge
+                # the identical work accounting without re-walking
+                rs = jax.lax.cond(
+                    wave == 0,
+                    lambda r: protocol.charge_round_state(
+                        r, batch, live, k if full else width),
+                    refresh, rs)
             else:
-                rs, _, _, _ = protocol.refresh_round_state_compact(
-                    rs, batch, live, width, layout)
+                rs = refresh(rs)
             res = rs.res
 
             # --- greedy wave fixpoint (trip count = conflict-chain depth)
             committing_t, trips = protocol.wave_commit(
-                res, rs.conflict, pending_t, rank, n_obj)
+                res, rs.conflict, pending_t, rank, n_obj, block=wave_block)
 
             # commit position = running count in arrival order; the cumsum
             # lives in position space, gathered back through each txn's
-            # rank
+            # rank.  Version stamps are gv-rebased (gv0 + position + 1) so
+            # they stay globally monotone across batches — the dirty
+            # predicate behind cross-batch speculation (versions > snap_gv)
             commit_idx_t = n_comm + jnp.cumsum(committing_t[arrival])[rank] - 1
             values, versions = protocol.fused_write_back(
                 rs.values, rs.versions, res.waddrs, res.wvals, res.wn,
-                committing_t, rank, commit_idx_t + 1, layout)
+                committing_t, rank, gv0 + commit_idx_t + 1, layout)
 
             commit_pos = jnp.maximum(
                 tr["commit_pos"],
@@ -126,8 +157,13 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
                exec_ops=jnp.zeros((), jnp.int32),
                wave_trips=jnp.zeros((), jnp.int32),
                live_per_round=jnp.full((limit,), -1, jnp.int32))
-    rs0 = protocol.init_round_state(batch, store.values, store.versions,
-                                    layout=layout)
+    seeded = seed is not None   # static per trace (None jits leaf-free)
+    if seeded:
+        rs0, spec_inv, spec_rnds = protocol.seed_round_state(
+            batch, store, seed, compact=(incremental and compact))
+    else:
+        rs0 = protocol.init_round_state(batch, store.values,
+                                        store.versions, layout=layout)
     ladder = (protocol.compact_ladder(k) if (incremental and compact)
               else [k])
     state = (rs0, ~real, jnp.zeros((), jnp.int32),
@@ -145,13 +181,17 @@ def _occ_execute(store: TStore, batch: TxnBatch, arrival: jax.Array,
         walked_slots=rs.walked_slots,
         live_per_round=tr["live_per_round"],
         # a txn that retried r waves committed in wave r (vacant: none)
-        commit_round=jnp.where(real, tr["retries"], -1))
+        commit_round=jnp.where(real, tr["retries"], -1),
+        **(dict(spec_executed=real.sum(dtype=jnp.int32),
+                spec_invalidated=spec_inv,
+                spec_rounds=spec_rnds) if seeded else {}))
     return store_with(store, rs.values, rs.versions,
                       store.gv + n_comm), trace
 
 
 occ_execute = jax.jit(
-    _occ_execute, static_argnames=("max_waves", "incremental", "compact"))
+    _occ_execute, static_argnames=("max_waves", "incremental", "compact",
+                                   "wave_block"))
 
 
 def _occ_raw(store, batch, seq, lanes, n_lanes):
@@ -161,6 +201,12 @@ def _occ_raw(store, batch, seq, lanes, n_lanes):
     return _occ_execute(store, batch, jnp.argsort(seq))
 
 
+def _occ_raw_spec(store, batch, seq, lanes, n_lanes, seed):
+    del lanes, n_lanes
+    return _occ_execute(store, batch, jnp.argsort(seq), seed=seed)
+
+
 register_engine(EngineDef(
     "occ", _occ_raw,
-    doc="traditional OCC baseline — commit order = arrival interleaving"))
+    doc="traditional OCC baseline — commit order = arrival interleaving",
+    raw_spec=_occ_raw_spec))

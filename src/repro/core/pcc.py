@@ -78,7 +78,9 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                  max_rounds: int | None = None,
                  live_promotion: bool = True,
                  incremental: bool = True,
-                 compact: bool = True) -> tuple[TStore, ExecTrace]:
+                 compact: bool = True,
+                 seed: "protocol.SpecSeed | None" = None
+                 ) -> tuple[TStore, ExecTrace]:
     """Execute a batch of preordered transactions under PCC.
 
     Args:
@@ -113,6 +115,14 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
              and are bit-identical to the masked loop (False; asserted
              by tests and ``scripts/ci.sh --compact-smoke``).  Only
              meaningful with ``incremental=True``.
+      seed:  optional :class:`protocol.SpecSeed` — a speculative round-0
+             execution of this batch against an EARLIER store snapshot
+             (cross-batch pipelining, ``PotSession(pipeline_depth=...)``).
+             ``protocol.seed_round_state`` re-bases it onto the current
+             store (re-executing only rows whose read set went stale)
+             and round 0 charges its ordinary work accounting without
+             re-walking the batch — bit-identical store and trace to the
+             unseeded call, except the ``spec_*`` observables.
     Returns:
       (new store, trace).  ``new_store.gv`` equals ``store.gv`` + the
       number of real (non-vacant) transactions.
@@ -137,11 +147,25 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
             # rung they execute gather-compacted at (width, L) ------------
             pending_t = real & (rank >= n_comm)
             live = pending_t if incremental else jnp.ones((k,), bool)
-            if full:
-                rs = protocol.refresh_round_state(rs, batch, live, layout)
+
+            def refresh(r):
+                if full:
+                    return protocol.refresh_round_state(r, batch, live,
+                                                        layout)
+                return protocol.refresh_round_state_compact(
+                    r, batch, live, width, layout)[0]
+
+            if seeded:
+                # round 0's read phase already ran speculatively and was
+                # re-based onto this store by seed_round_state — charge
+                # the identical work accounting without re-walking
+                rs = jax.lax.cond(
+                    rnd == 0,
+                    lambda r: protocol.charge_round_state(
+                        r, batch, live, k if full else width),
+                    refresh, rs)
             else:
-                rs, _, _, _ = protocol.refresh_round_state_compact(
-                    rs, batch, live, width, layout)
+                rs = refresh(rs)
             res: TxnResult = rs.res
 
             # --- carried conflict analysis + prefix fixpoint (txn space) -
@@ -245,8 +269,13 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         promotions=jnp.zeros((), jnp.int32),
         live_per_round=jnp.full((limit,), -1, jnp.int32),
     )
-    rs0 = protocol.init_round_state(batch, store.values, store.versions,
-                                    layout=layout)
+    seeded = seed is not None   # static per trace (None jits leaf-free)
+    if seeded:
+        rs0, spec_inv, spec_rnds = protocol.seed_round_state(
+            batch, store, seed, compact=(incremental and compact))
+    else:
+        rs0 = protocol.init_round_state(batch, store.values,
+                                        store.versions, layout=layout)
     ladder = (protocol.compact_ladder(k) if (incremental and compact)
               else [k])
     state = (rs0, store.gv, jnp.zeros((), jnp.int32),
@@ -269,7 +298,9 @@ def _pcc_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         # PCC commits in sequence order: position = rank in the order.
         # Vacant rows and rows a max_rounds cap left uncommitted
         # (commit_round < 0) are not part of the history: commit_pos -1
-        commit_pos=jnp.where(real & (tr["commit_round"] >= 0), rank, -1))
+        commit_pos=jnp.where(real & (tr["commit_round"] >= 0), rank, -1),
+        **(dict(spec_executed=n_real, spec_invalidated=spec_inv,
+                spec_rounds=spec_rnds) if seeded else {}))
     return store_with(store, rs.values, rs.versions, gv), trace
 
 
@@ -284,6 +315,12 @@ def _pcc_raw(store, batch, seq, lanes, n_lanes):
     return _pcc_execute(store, batch, seq)
 
 
+def _pcc_raw_spec(store, batch, seq, lanes, n_lanes, seed):
+    del lanes, n_lanes
+    return _pcc_execute(store, batch, seq, seed=seed)
+
+
 register_engine(EngineDef(
     "pcc", _pcc_raw,
-    doc="Pot Concurrency Control — ordered prefix commit + live promotion"))
+    doc="Pot Concurrency Control — ordered prefix commit + live promotion",
+    raw_spec=_pcc_raw_spec))

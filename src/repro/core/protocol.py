@@ -527,6 +527,146 @@ def refresh_round_state_compact(state: RoundState, batch: TxnBatch,
     return state, cres, idx, valid
 
 
+# --------------------------------------------------------------------------
+# Cross-batch speculative pipelining (PR 7)
+# --------------------------------------------------------------------------
+#
+# While batch n's tail rounds commit, PotSession executes batch n+1
+# against the store image snapshotted at enqueue time (spec_execute),
+# capturing the round-0 read phase AND the conflict analysis as a
+# SpecSeed.  When batch n+1's turn comes, the engine re-bases the seed
+# onto the now-current store (seed_round_state): rows whose read set
+# hit an address written after the snapshot (versions > snap_gv — the
+# exact dirty predicate, version stamps being globally monotone
+# sequence numbers) re-execute through the same compact-ladder
+# machinery; every other row's cached result is already bit-identical
+# to what a fresh round 0 would produce, because a row's execution is
+# a pure function of its read values (read-your-writes is row-local
+# and logged in raddrs, so chained indirect reads are covered by
+# induction along the read chain).  The engine then charges round 0's
+# ordinary work accounting without re-walking it, and everything
+# downstream — commit decisions, write-back, trace — is the serial
+# computation on bit-identical inputs.  Ranks stay globally consecutive
+# across batches, so the validation never leaves rank space.
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SpecSeed:
+    """A speculative round-0 execution of one batch against an earlier
+    store snapshot: the cached results and conflict structure a seeded
+    engine re-bases instead of re-walking (see module section above).
+    ``conflict``/``foot_bits``/``write_bits`` mirror
+    :class:`RoundState`'s backend-static optionality."""
+
+    res: TxnResult                # (K rows) speculative executions
+    conflict: jax.Array | None    # (K, K) speculative conflict table
+    foot_bits: jax.Array | None   # packed footprints (TPU / sharded)
+    write_bits: jax.Array | None  # packed write sets  (TPU / sharded)
+    snap_gv: jax.Array            # () int32 — store.gv at the snapshot
+
+
+def spec_execute(store, batch: TxnBatch) -> SpecSeed:
+    """Speculatively run ``batch``'s round-0 read phase + conflict
+    analysis against ``store``'s current image and capture it as a
+    :class:`SpecSeed`.  Pure read — the store is not modified (and the
+    session's jit of this function must NOT donate it)."""
+    layout = store.layout
+    rs = init_round_state(batch, store.values, store.versions,
+                          layout=layout)
+    rs = refresh_round_state(rs, batch, batch.n_ins > 0, layout)
+    return SpecSeed(res=rs.res, conflict=rs.conflict,
+                    foot_bits=rs.foot_bits, write_bits=rs.write_bits,
+                    snap_gv=store.gv)
+
+
+def speculation_invalid(res: TxnResult, versions: jax.Array,
+                        snap_gv: jax.Array,
+                        layout: StoreLayout | None = None) -> jax.Array:
+    """(K,) bool — rows whose logged read set touches an address written
+    after the snapshot (``versions > snap_gv``).  Read-set-only is
+    sound: clean reads replay bit-identically (row purity), and a row's
+    own writes need no check — its write set is a function of its reads.
+    Conservative only where run_txn logs a read-your-writes read whose
+    address happens to be dirty (a false re-execution, never a false
+    accept)."""
+    if layout is not None and layout.sharded:
+        return kernel_ops.spec_read_invalid_sharded(
+            res.raddrs, res.rn, versions, snap_gv, layout)
+    n_obj = layout.n_objects if layout is not None else versions.shape[0]
+    return kernel_ops.spec_read_invalid(res.raddrs, res.rn, versions,
+                                        snap_gv, n_obj)
+
+
+def seed_round_state(batch: TxnBatch, store, seed: SpecSeed,
+                     compact: bool = True
+                     ) -> tuple[RoundState, jax.Array, jax.Array]:
+    """Re-base a :class:`SpecSeed` onto the current store: validate the
+    speculated rows, re-execute only the invalidated ones (through the
+    compact ladder when they fit a narrow rung), and return a
+    RoundState whose ``res``/``conflict``/``foot_bits``/``write_bits``
+    are bit-identical to a fresh round-0 refresh of the whole batch
+    against ``store`` — with the work counters zeroed, so the engine's
+    round 0 can charge its ordinary accounting on top and the trace
+    stays bit-identical to the serial run (the re-execution cost is
+    surfaced separately, via the returned counts).
+
+    Returns ``(state, n_invalid, spec_rounds)`` — ``spec_rounds`` is 1
+    iff any row re-executed, else 0.
+    """
+    layout = store.layout
+    k = batch.n_txns
+    rs = init_round_state(batch, store.values, store.versions,
+                          layout=layout)
+    rs = dataclasses.replace(rs, res=seed.res, conflict=seed.conflict,
+                             foot_bits=seed.foot_bits,
+                             write_bits=seed.write_bits)
+    real = batch.n_ins > 0
+    invalid = speculation_invalid(seed.res, store.versions, seed.snap_gv,
+                                  layout) & real
+    n_inv = invalid.sum(dtype=jnp.int32)
+    # exactly-one-rung dispatch over the same ladder the engines cascade
+    # down: the narrowest width the invalidated set fits re-executes it
+    ladder = compact_ladder(k) if compact else [k]
+    for i, width in enumerate(ladder):
+        nxt = ladder[i + 1] if i + 1 < len(ladder) else 0
+        sel = n_inv > nxt
+        if width < k:
+            sel = sel & (n_inv <= width)
+
+        def refresh(r, width=width):
+            if width >= k:
+                return refresh_round_state(r, batch, invalid, layout)
+            return refresh_round_state_compact(r, batch, invalid, width,
+                                               layout)[0]
+
+        rs = jax.lax.cond(sel, refresh, lambda r: r, rs)
+    z = jnp.zeros
+    rs = dataclasses.replace(
+        rs, live=z((k,), bool), live_txns=z((), jnp.int32),
+        live_slots=z((), jnp.int32), walked_slots=z((), jnp.int32))
+    return rs, n_inv, (n_inv > 0).astype(jnp.int32)
+
+
+def charge_round_state(state: RoundState, batch: TxnBatch,
+                       live: jax.Array, width: int) -> RoundState:
+    """The accounting-only twin of a round-0 refresh at ``width``: set
+    the live mask and charge exactly the counters
+    :func:`refresh_round_state` (full rung) or
+    :func:`refresh_round_state_compact` (``live.sum() <= width``, where
+    the gathered ``valid`` count equals ``live.sum()``) would — without
+    touching ``res`` or the conflict structure, which a
+    :func:`seed_round_state` re-base already made bit-identical."""
+    length = batch.opcodes.shape[1]
+    return dataclasses.replace(
+        state, live=live,
+        live_txns=state.live_txns + live.sum(dtype=jnp.int32),
+        live_slots=state.live_slots
+        + jnp.where(live, batch.n_ins, 0).sum(dtype=jnp.int32),
+        walked_slots=state.walked_slots
+        + jnp.asarray(width * length, jnp.int32))
+
+
 def earlier_writer_conflicts(res, conflict, writer_mask: jax.Array,
                              rank: jax.Array, n_objects: int) -> jax.Array:
     """bad (K,) bool, txn space: does txn t's footprint (reads ∪ writes)
@@ -593,7 +733,7 @@ def prefix_commit(res, conflict, order: jax.Array, rank: jax.Array,
 
 
 def wave_commit(res, conflict, pending: jax.Array, rank: jax.Array,
-                n_objects: int) -> jax.Array:
+                n_objects: int, block: int = 1) -> jax.Array:
     """OCC's arrival-order wave rule: c[t] = pending[t] ∧ ¬∃ earlier q:
     c[q] ∧ conflict[t, q] — the greedy kernel of the conflict DAG (no
     prefix rule: a conflicting txn aborts but later ones keep
@@ -605,17 +745,32 @@ def wave_commit(res, conflict, pending: jax.Array, rank: jax.Array,
     a txn's verdict is final once all its conflict predecessors'
     verdicts are, by induction along the order.
 
-    Returns ``(committing, trips)`` — ``trips`` () int32 counts fixpoint
-    iterations (≥ 1; the final converging check is included), i.e. the
-    wave's conflict-chain depth + 1.  Engines accumulate it into
-    ``ExecTrace.wave_trips`` so contention cost is observable per round.
+    ``block`` unrolls B conflict queries per `while_loop` trip (the
+    blocked solve): on deep conflict chains the dominant cost is the
+    per-trip loop overhead (condition sync + carried-state round trip),
+    which the unroll divides by B.  Decision-identical for ANY block:
+    the iterates F(c), F²(c), ... from c = pending converge monotonely
+    layer-by-layer to the unique greedy solution, and a convergent
+    sequence with F^B(c) == c must already sit AT the fixpoint (a
+    B-periodic tail of a convergent sequence is constant), so the
+    blocked convergence test never exits early on a non-solution and
+    terminates once B·trips covers the chain depth.
+
+    Returns ``(committing, trips)`` — ``trips`` () int32 counts
+    `while_loop` trips (≥ 1; the final converging trip is included),
+    i.e. ceil over B of the wave's conflict-chain depth + 1.  Engines
+    accumulate it into ``ExecTrace.wave_trips`` so contention cost is
+    observable per round.
     """
 
     def body(state):
         c, _, trips = state
-        blocked = earlier_writer_conflicts(res, conflict, c, rank, n_objects)
-        c_next = pending & ~blocked
-        return c_next, (c_next == c).all(), trips + 1
+        start = c
+        for _ in range(block):
+            blocked = earlier_writer_conflicts(res, conflict, c, rank,
+                                               n_objects)
+            c = pending & ~blocked
+        return c, (c == start).all(), trips + 1
 
     c, _, trips = jax.lax.while_loop(
         lambda s: ~s[1], body,

@@ -54,6 +54,25 @@ record/replay debugging (paper §2.1)::
                         sequencer=session.replay_sequencer())
     replay.run_stream(batches)                     # bitwise-identical
 
+**Cross-batch speculative pipelining** (PR 7): with
+``pipeline_depth=D >= 1``, ``run_stream`` / ``serve`` keep a window of
+up to D batches *speculatively executed* ahead of the committed store:
+each enqueued batch runs its round-0 read phase + conflict analysis
+against the CURRENT store image (``protocol.spec_execute`` — a pure
+read, overlappable with the predecessor batches' tail rounds), and when
+its turn comes the engine re-bases that seed onto the now-committed
+store: rows whose read set hit a post-snapshot write (the version-stamp
+dirty predicate ``versions > snap_gv``) re-execute through the ordinary
+compact ladder; everything else is already bit-identical to a fresh
+round 0.  Ranks are globally consecutive across batches (the sequencer
+/ ingress drain order), so the validation stays in rank space and the
+pipelined stream's stores, fingerprints, traces and ``replay_log()``
+are bit-identical to the serial ``D=0`` run by construction (asserted
+in tests/test_pipeline.py and ``scripts/ci.sh --pipeline-smoke``); the
+speculation cost is surfaced only in the new ``ExecTrace.spec_*``
+observables.  ``D=0`` (default) is exactly the pre-PR path; engines
+without a seeded entry point (``raw_spec is None``) fall back to it.
+
 Every engine runs through the same ``submit`` — there is no per-engine
 signature anywhere above this layer.
 """
@@ -68,6 +87,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import protocol
 from repro.core.engine import EngineDef, ExecTrace, get_engine
 from repro.core.sequencer import ReplaySequencer, RoundRobinSequencer
 from repro.core.tstore import TStore, make_store, shard_store
@@ -98,6 +118,20 @@ def _jitted_step(engine_name: str, donate: bool):
     eng = get_engine(engine_name)
     return jax.jit(eng.raw, static_argnums=(4,),
                    donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_spec_step(engine_name: str, donate: bool):
+    """The seeded twin of :func:`_jitted_step` (``eng.raw_spec``): same
+    donation, the extra trailing ``seed`` argument traced."""
+    eng = get_engine(engine_name)
+    return jax.jit(eng.raw_spec, static_argnums=(4,),
+                   donate_argnums=(0,) if donate else ())
+
+
+# the speculative round-0 step: reads the store, never donates it — the
+# same buffers are consumed later by the real (seeded) step
+_spec_execute_step = jax.jit(protocol.spec_execute)
 
 
 class PotSession:
@@ -139,6 +173,11 @@ class PotSession:
         one-per-device under ``jax.experimental.shard_map``.  The mesh
         travels on the store pytree as a static field, so it threads
         through the cached jitted step with no signature change.
+      pipeline_depth: speculate up to D batches ahead of the committed
+        store in ``run_stream`` / ``serve`` (cross-batch pipelining —
+        see the module docstring).  Bit-identical to the serial stream
+        for any D; 0 (default) is exactly the pre-PR serial path, as is
+        any engine without a seeded entry point (``raw_spec is None``).
     """
 
     def __init__(self, n_objects: int | None = None, *, slot: int = 1,
@@ -146,7 +185,7 @@ class PotSession:
                  engine: str | EngineDef = "pcc", sequencer=None,
                  n_lanes: int = 1, donate: bool = True,
                  bucket: bool = True, bucket_ladder: str = "pow2",
-                 shards: int = 1, mesh=None):
+                 shards: int = 1, mesh=None, pipeline_depth: int = 0):
         if store is None:
             if n_objects is None:
                 raise ValueError("PotSession needs n_objects or store")
@@ -171,6 +210,18 @@ class PotSession:
             else RoundRobinSequencer(n_root_lanes=n_lanes)
         self.bucket = bucket
         self._step = _jitted_step(self.engine.name, donate)
+        if pipeline_depth < 0:
+            raise ValueError("pipeline_depth must be >= 0")
+        self.pipeline_depth = pipeline_depth
+        # pipelining needs the engine's seeded entry point; without one
+        # the session silently serves the (bit-identical) serial path
+        self._pipelined = (pipeline_depth > 0
+                           and self.engine.raw_spec is not None)
+        self._spec_step = (_jitted_spec_step(self.engine.name, donate)
+                           if self._pipelined else None)
+        # speculation window: (batch, seq, lane_ids, seed, k, bk) tuples
+        # enqueued ahead of the committed store, oldest first
+        self._window: list[tuple] = []
         self.traces: list[ExecTrace] = []
         # replay log cache, materialized lazily (device->host sync happens
         # in replay_log(), never on the hot submit path)
@@ -213,18 +264,21 @@ class PotSession:
         keys = list(lanes) if lanes is not None else [0] * k
         if len(keys) != k:
             raise ValueError(f"batch has {k} txns, got {len(keys)} lanes")
+        # submit is synchronous (returns THIS batch's trace), so any
+        # speculation window left pending must execute first — order is
+        # the sequencer's.  run_stream/serve always flush before
+        # returning, so this is a no-op there.
+        self._spec_flush()
         seq = np.asarray(self.sequencer.order_for(keys), np.int64)
         return self._submit_seq(batch, seq, self._lane_ids(keys))
 
-    def _submit_seq(self, batch: TxnBatch, seq: np.ndarray,
-                    lane_ids: np.ndarray,
-                    ladder: str | None = None) -> ExecTrace:
-        """The core of ``submit`` with the sequence numbers already
-        assigned — the entry point for batch formers that ARE the
-        sequencer (the ingress pool's drain order): ``seq`` ranks the
-        rows, ``lane_ids`` are engine-facing lanes (reduced mod
-        ``n_lanes``), ``ladder`` optionally overrides the session's
-        bucket family for this batch."""
+    def _prepare(self, batch: TxnBatch, seq: np.ndarray,
+                 lane_ids: np.ndarray, ladder: str | None = None):
+        """Bucket accounting + vacant-row padding for one batch, shared
+        by the serial step and the speculative enqueue: pads the batch
+        to its (K, L) bucket and extends ``seq`` / ``lane_ids`` over the
+        vacant rows (sequence numbers past every real one).  Returns
+        ``(batch, seq, lane_ids, k, bk)`` with k the real row count."""
         k = batch.n_txns
         seq = np.asarray(seq, np.int64)
         lane_ids = np.asarray(lane_ids, np.int64) % max(self.n_lanes, 1)
@@ -237,18 +291,65 @@ class PotSession:
             seq = np.concatenate([seq, base + 1 + np.arange(bk - k)])
             lane_ids = np.concatenate(
                 [lane_ids, np.zeros((bk - k,), lane_ids.dtype)])
-        self.store, trace = self._step(
-            self.store, batch, jnp.asarray(seq, jnp.int32),
-            jnp.asarray(lane_ids, jnp.int32), self.n_lanes)
+        return batch, seq, lane_ids, k, bk
+
+    def _record(self, trace: ExecTrace, k: int, bk: int) -> ExecTrace:
+        """Post-step bookkeeping: slice vacant rows back off and append
+        the trace (kept on device — the commit order is recorded by
+        keeping the trace, and replay_log() materializes it on demand,
+        so no device->host sync on the streaming hot path)."""
         if bk != k:   # slice vacant rows back off (lazy device ops)
             trace = dataclasses.replace(trace, **{
                 f: getattr(trace, f)[:k] for f in _PER_TXN_FIELDS})
-        # the trace stays on device: the commit order is recorded by
-        # keeping the trace, and replay_log() materializes it on demand —
-        # no device->host sync on the streaming hot path.
         self._n_txns += k
         self.traces.append(trace)
         return trace
+
+    def _submit_seq(self, batch: TxnBatch, seq: np.ndarray,
+                    lane_ids: np.ndarray,
+                    ladder: str | None = None) -> ExecTrace:
+        """The core of ``submit`` with the sequence numbers already
+        assigned — the entry point for batch formers that ARE the
+        sequencer (the ingress pool's drain order): ``seq`` ranks the
+        rows, ``lane_ids`` are engine-facing lanes (reduced mod
+        ``n_lanes``), ``ladder`` optionally overrides the session's
+        bucket family for this batch."""
+        batch, seq, lane_ids, k, bk = self._prepare(batch, seq, lane_ids,
+                                                    ladder)
+        self.store, trace = self._step(
+            self.store, batch, jnp.asarray(seq, jnp.int32),
+            jnp.asarray(lane_ids, jnp.int32), self.n_lanes)
+        return self._record(trace, k, bk)
+
+    # ------------------------------------------ cross-batch speculation
+    def _spec_enqueue(self, batch: TxnBatch, seq: np.ndarray,
+                      lane_ids: np.ndarray,
+                      ladder: str | None = None) -> None:
+        """Speculatively execute one batch's round 0 against the CURRENT
+        store image (a pure read — the store buffers stay owned by the
+        pending window's drains) and append it to the window."""
+        batch, seq, lane_ids, k, bk = self._prepare(batch, seq, lane_ids,
+                                                    ladder)
+        seed = _spec_execute_step(self.store, batch)
+        self._window.append((batch, seq, lane_ids, seed, k, bk))
+
+    def _spec_drain(self) -> ExecTrace:
+        """Execute the window's oldest batch for real: the engine's
+        seeded step validates the speculation against the now-current
+        store and re-executes only invalidated rows."""
+        batch, seq, lane_ids, seed, k, bk = self._window.pop(0)
+        self.store, trace = self._spec_step(
+            self.store, batch, jnp.asarray(seq, jnp.int32),
+            jnp.asarray(lane_ids, jnp.int32), self.n_lanes, seed)
+        return self._record(trace, k, bk)
+
+    def _spec_flush(self) -> list[ExecTrace]:
+        """Drain the whole speculation window (stream end / before any
+        synchronous submit)."""
+        out = []
+        while self._window:
+            out.append(self._spec_drain())
+        return out
 
     def serve(self, pool, budget: int = 64, *,
               max_batches: int | None = None,
@@ -270,16 +371,27 @@ class PotSession:
 
         Two replica sessions serving pools fed the same arrival journal
         emit bit-identical stores, fingerprints and ``replay_log()``s
-        for ANY budget schedules that drain the same prefix.
+        for ANY budget schedules that drain the same prefix — and for
+        any ``pipeline_depth`` (speculation changes when work runs, not
+        what commits; the window drains fully before returning).
         """
         traces: list[ExecTrace] = []
-        while max_batches is None or len(traces) < max_batches:
+        formed = 0
+        while max_batches is None or formed < max_batches:
             fb = pool.drain(budget)
             if fb is None:
                 break
-            traces.append(self._submit_seq(
-                fb.batch, fb.seq, fb.lanes,
-                ladder=ladder if ladder is not None else fb.ladder))
+            formed += 1
+            fb_ladder = ladder if ladder is not None else fb.ladder
+            if self._pipelined:
+                self._spec_enqueue(fb.batch, fb.seq, fb.lanes,
+                                   ladder=fb_ladder)
+                while len(self._window) > self.pipeline_depth:
+                    traces.append(self._spec_drain())
+            else:
+                traces.append(self._submit_seq(fb.batch, fb.seq, fb.lanes,
+                                               ladder=fb_ladder))
+        traces.extend(self._spec_flush())
         return traces
 
     def run_stream(self, batches: Iterable[TxnBatch],
@@ -289,14 +401,34 @@ class PotSession:
 
         The stream may be ragged — batches of arbitrary (K, L) shapes —
         and still compiles at most one step per shape bucket (the
-        bucketed ``submit`` path; ``compile_count()`` proves it)."""
+        bucketed ``submit`` path; ``compile_count()`` proves it).
+
+        With ``pipeline_depth=D >= 1`` this is the pipelined loop: each
+        batch speculates against the current store at enqueue time and
+        the window drains once it exceeds D — bit-identical traces in
+        the same (submission) order, with the overlap surfaced in the
+        ``spec_*`` trace fields."""
         batches = list(batches)
         lanes_list = list(lanes) if lanes is not None \
             else [None] * len(batches)
         if len(lanes_list) != len(batches):
             raise ValueError(
                 f"{len(batches)} batches but {len(lanes_list)} lane lists")
-        return [self.submit(b, l) for b, l in zip(batches, lanes_list)]
+        if not self._pipelined:
+            return [self.submit(b, l) for b, l in zip(batches, lanes_list)]
+        traces: list[ExecTrace] = []
+        for b, l in zip(batches, lanes_list):
+            k = b.n_txns
+            keys = list(l) if l is not None else [0] * k
+            if len(keys) != k:
+                raise ValueError(
+                    f"batch has {k} txns, got {len(keys)} lanes")
+            seq = np.asarray(self.sequencer.order_for(keys), np.int64)
+            self._spec_enqueue(b, seq, self._lane_ids(keys))
+            while len(self._window) > self.pipeline_depth:
+                traces.append(self._spec_drain())
+        traces.extend(self._spec_flush())
+        return traces
 
     def _lane_ids(self, keys) -> np.ndarray:
         """Engine-facing lane array: numeric keys mod n_lanes; symbolic

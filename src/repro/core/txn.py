@@ -21,6 +21,16 @@ Addressing: eff = addr                     (direct)
 Reads observe the transaction's own deferred writes (read-your-writes, as
 in Fig. 2a line 5/6 of the paper: "return the buffered value for o in the
 write set, if existing").
+
+Two properties of this VM carry the cross-batch speculation invariant
+(PR 7, ``protocol.spec_execute`` / ``seed_round_state``): a row's
+execution is a pure function of the values its logged reads observed
+(so a speculated row whose reads all survive validation replays
+bit-identically without re-running), and read-your-writes is row-local
+(a row never observes another row's deferred writes, so the logged read
+set is exactly the row's store footprint).  Invalidated rows re-execute
+through the same ``run_live`` / ``run_live_compact`` executors the
+round loops use — there is no separate speculation VM.
 """
 
 from __future__ import annotations

@@ -397,6 +397,105 @@ def conflict_matrix_delta_compact_sharded(foot_bits: jax.Array,
     return new.at[:, tgt].set(col_strip, mode="drop")
 
 
+# --------------------------------------------------------------------------
+# Cross-batch speculative validation (PR 7)
+# --------------------------------------------------------------------------
+#
+# Cross-batch speculative pipelining (session.PotSession pipeline_depth)
+# executes batch n+1 against the store image snapshotted BEFORE batch n
+# committed.  Version stamps are globally monotone sequence numbers
+# (every engine write-back stamps gv0 + commit position + 1), so an
+# address was written after the snapshot iff versions[a] > snap_gv —
+# the EXACT dirty predicate at any pipeline depth.  A speculated row
+# stays valid iff none of its logged READ addresses is dirty: a row's
+# execution is a pure function of its read values (read-your-writes is
+# row-local), so clean reads replay bit-identically and the write set
+# need not be checked.  The dirty set packs into ONE bitset row
+# (word = a // 32, bit = a % 32 — validate.py's convention), turning
+# the whole validation into a (K, 1) rectangular strip of the same
+# bitset-intersection Pallas kernel the compact round update uses
+# (conflict.conflict_matrix_bits_pair); off-TPU a dense gather
+# fallback with identical verdicts (asserted in tests/test_pipeline.py).
+
+
+def spec_dirty_words(versions: jax.Array, snap_gv: jax.Array,
+                     n_objects: int) -> jax.Array:
+    """Bit-pack the post-snapshot dirty set: word ``a // 32`` bit
+    ``a % 32`` is set iff ``versions[a] > snap_gv``.  ``versions`` may
+    be the dense (O,) array or the sharded (S, C) stack — the flat view
+    lists addresses in order either way (contiguous range shards), and
+    the padded tail rows of the last shard are never stamped (version
+    0), hence never dirty.  Returns (ceil(O/32),) int32."""
+    w = -(-n_objects // 32)
+    dirty = versions.reshape(-1)[:n_objects] > snap_gv
+    dirty = jnp.pad(dirty, (0, w * 32 - n_objects))
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    words = (dirty.reshape(w, 32).astype(jnp.uint32) * weights).sum(
+        axis=1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def spec_dirty_words_sharded(versions: jax.Array, snap_gv: jax.Array,
+                             layout) -> jax.Array:
+    """Per-shard twin of :func:`spec_dirty_words`: shard s's words span
+    only its own C-object range (shard-local bits, like
+    ``packed_footprints_sharded``).  versions (S, C) -> (S, W_s) int32."""
+    w = layout.words_per_shard
+    c = layout.shard_size
+    dirty = versions > snap_gv            # padding rows stamp 0: never dirty
+    dirty = jnp.pad(dirty, ((0, 0), (0, w * 32 - c)))
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    words = (dirty.reshape(layout.shards, w, 32).astype(jnp.uint32)
+             * weights).sum(axis=2, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def spec_read_invalid(raddrs: jax.Array, rn: jax.Array,
+                      versions: jax.Array, snap_gv: jax.Array,
+                      n_objects: int) -> jax.Array:
+    """Cross-batch read-set validation: (K,) bool, True where a row's
+    logged read set hits an address written after the snapshot
+    (``versions > snap_gv``).  On TPU the dirty words form a 1-row
+    write set and the verdict is a (K, 1) strip of the rectangular
+    bitset-intersection kernel; off-TPU a dense version gather."""
+    k, length = raddrs.shape
+    if not _on_tpu():
+        valid = jnp.arange(length)[None, :] < rn[:, None]
+        dirty = versions.reshape(-1)[:n_objects] > snap_gv
+        return (valid & dirty[raddrs]).any(axis=1)
+    read_bits = _val.pack_addr_sets(raddrs, rn, n_objects)
+    dwords = spec_dirty_words(versions, snap_gv, n_objects)
+    rb = _pad_to(_pad_to(read_bits, _conf.BI, 0), _conf.BW, 1)
+    db = _pad_to(_pad_to(dwords[None, :], _conf.BJ, 0), _conf.BW, 1)
+    return _conf.conflict_matrix_bits_pair(rb, db, interpret=False)[:k, 0]
+
+
+def spec_read_invalid_sharded(raddrs: jax.Array, rn: jax.Array,
+                              versions: jax.Array, snap_gv: jax.Array,
+                              layout) -> jax.Array:
+    """Sharded twin of :func:`spec_read_invalid`: per-shard read bits
+    against per-shard dirty words, OR-reduced — the PR 5 OR-over-shards
+    invariant (shards partition the address space, so a dirty read hit
+    lands in exactly one shard's strip)."""
+    k, length = raddrs.shape
+    c = layout.shard_size
+    slotv = jnp.arange(length)[None, :] < rn[:, None]
+    dwords = spec_dirty_words_sharded(versions, snap_gv, layout)
+    out = jnp.zeros((k,), bool)
+    for s in range(layout.shards):
+        rb = _val.pack_addr_sets_masked(
+            raddrs - s * c, slotv & (raddrs // c == s), c)
+        if _on_tpu():
+            rbp = _pad_to(_pad_to(rb, _conf.BI, 0), _conf.BW, 1)
+            db = _pad_to(_pad_to(dwords[s][None, :], _conf.BJ, 0),
+                         _conf.BW, 1)
+            out = out | _conf.conflict_matrix_bits_pair(
+                rbp, db, interpret=False)[:k, 0]
+        else:
+            out = out | ((rb & dwords[s][None, :]) != 0).any(axis=1)
+    return out
+
+
 def adamw_update(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999,
                  eps=1e-8, wd=0.01):
     """Fast-mode fused AdamW over an arbitrary-shaped parameter leaf."""

@@ -1,0 +1,23 @@
+"""Shared test harness hygiene.
+
+The suite jit-compiles thousands of (engine, shape, path) variants.  On
+CPU every compiled XLA executable keeps its own code pages mapped, and
+the kernel's default ``vm.max_map_count`` (65530) is low enough that a
+full serial run can exhaust the process VMA table and segfault inside a
+late LLVM compile — deterministically at the suite's biggest graph,
+while any module in isolation passes.  Dropping the compile caches at
+module boundaries bounds the map count at the cost of re-compiling the
+shapes shared across modules.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_compile_cache_maps():
+    yield
+    jax.clear_caches()
+    gc.collect()
