@@ -118,6 +118,9 @@ for name, budgets in (("A: one big drain", [60]),
             is not None:
         sess._submit_seq(fb.batch, fb.seq, fb.lanes, ladder=fb.ladder)
         n_batches += 1
+    # every admitted transaction was formed into a batch: a non-empty
+    # pool here would mean the replicas compared different prefixes
+    assert pool.depth == 0, f"replica {name} left {pool.depth} txns parked"
     replica_runs.append((sess.fingerprint(), sess.replay_log()))
     print(f"  replica {name}: {n_batches} batches, "
           f"fingerprint 0x{sess.fingerprint():08x}")

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [--pipeline-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [--pipeline-smoke] [--failover-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
 # the test suite: it executes every engine through the preserved legacy
@@ -40,6 +40,17 @@
 # solve is decision-identical with fewer while_loop trips (the
 # cross-batch speculation equivalence gate).
 #
+# --failover-smoke runs the FULL PR9 fault-injection matrix
+# (REPRO_FAILOVER_FULL=1 tests/test_failover.py): replicas killed at
+# deterministic (batch, phase) fault points — including real subprocess
+# SIGKILLs and torn mid-snapshot tmp dirs — across engines {pcc, occ} x
+# shards {1, 8} x pipeline_depth {0, 2} x two drain-budget schedules,
+# each restored from its latest complete snapshot + the arrival-journal
+# suffix and required to reconverge bitwise with the uninterrupted
+# replica (the crash-consistent failover gate).  A persistent XLA
+# compile cache is shared with the victim/recovery subprocesses so the
+# matrix is not compile-bound.
+#
 # Stages do NOT short-circuit each other: every requested stage runs and
 # the script exits non-zero if ANY stage failed (the last failing stage's
 # exit code is propagated).
@@ -53,6 +64,7 @@ COMPACT_SMOKE=0
 SHARD_SMOKE=0
 INGRESS_SMOKE=0
 PIPELINE_SMOKE=0
+FAILOVER_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
   case "$arg" in
@@ -62,6 +74,7 @@ for arg in "$@"; do
     --shard-smoke) SHARD_SMOKE=1 ;;
     --ingress-smoke) INGRESS_SMOKE=1 ;;
     --pipeline-smoke) PIPELINE_SMOKE=1 ;;
+    --failover-smoke) FAILOVER_SMOKE=1 ;;
     *) PYTEST_ARGS+=("$arg") ;;
   esac
 done
@@ -107,6 +120,14 @@ fi
 
 if [[ "$PIPELINE_SMOKE" == "1" ]]; then
   run_stage pipeline-smoke python benchmarks/engine_bench.py --pipeline-smoke
+fi
+
+if [[ "$FAILOVER_SMOKE" == "1" ]]; then
+  run_stage failover-smoke env \
+    REPRO_FAILOVER_FULL=1 \
+    JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-${TMPDIR:-/tmp}/repro_jax_pcache}" \
+    JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0 \
+    python -m pytest -x -q tests/test_failover.py
 fi
 
 exit "$FAIL"

@@ -4,13 +4,20 @@ Fault-tolerance contract (DESIGN.md §3): a restarted replica must rejoin
 the SAME serialization order.  A checkpoint therefore stores, alongside
 parameters and optimizer state, the Pot commit cursor (``gv``) and the
 data-pipeline step — restoring reproduces the run bitwise (tested in
-tests/test_ckpt.py).
+tests/test_ckpt.py).  The *session-level* snapshot of that contract —
+store image + sequencer cursor + ingress journal cursor, with chained
+self-verification — lives in :mod:`repro.core.checkpoint`; this module
+is the trainer-facing pytree checkpoint.
 
 Layout: <dir>/step_<n>/
     manifest.json             — tree structure, dtypes, shapes, host count
     shard_<h>.npz             — this host's param/opt leaves
-Commit protocol: write to step_<n>.tmp, fsync, atomic rename — a crash
-mid-save never corrupts the latest complete checkpoint.
+Commit protocol: the shared :func:`repro.core.checkpoint.atomic_dir`
+helper — stage into ``step_<n>.tmp_<host>``, fsync every file AND the
+directories, atomic rename, fsync the parent — so there is exactly one
+crash-safety implementation in the repo and a crash at ANY point leaves
+either the previous complete checkpoint or a ``*.tmp*`` turd that
+``latest_step`` never lists.
 """
 
 from __future__ import annotations
@@ -23,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.checkpoint import atomic_dir
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
@@ -34,27 +43,21 @@ def save(directory: str, step: int, state, *, host_id: int = 0,
     """Atomically save a pytree ``state`` for ``step``."""
     leaves, treedef = _flatten(state)
     final = os.path.join(directory, f"step_{step}")
-    tmp = final + f".tmp_{host_id}"
-    os.makedirs(tmp, exist_ok=True)
-
-    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"),
-             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
-    manifest = {
-        "step": step,
-        "n_leaves": len(leaves),
-        "treedef": str(treedef),
-        "n_hosts": n_hosts,
-        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
-        "shapes": [list(np.asarray(x).shape) for x in leaves],
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    with atomic_dir(final, suffix=f".tmp_{host_id}") as tmp:
+        np.savez(os.path.join(tmp, f"shard_{host_id}.npz"),
+                 **{f"leaf_{i}": np.asarray(x)
+                    for i, x in enumerate(leaves)})
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "n_hosts": n_hosts,
+            "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+            "shapes": [list(np.asarray(x).shape) for x in leaves],
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
     return final
 
 

@@ -35,6 +35,12 @@ Building blocks:
     TxnBatch / make_batch                    — transactions (dynamic r/w sets)
     RoundRobinSequencer / ReplaySequencer / ExplicitSequencer
     metrics.report_from_trace                — structural cost model
+    save_snapshot / restore_session / run_replica / FaultPlan
+                                             — crash-consistent session
+        snapshots (atomic, self-verifying) + deterministic replica
+        failover under injected faults (repro.core.checkpoint):
+        restore(latest snapshot) + arrival-journal suffix is bit-
+        identical to the uninterrupted stream
 
 Quickstart::
 
@@ -53,7 +59,13 @@ with their divergent signatures, and the old per-engine trace classes
 
 from repro.core.destm import DestmTrace, destm_execute
 from repro.core.ingress import (AdmitResult, FormedBatch, IngressPool,
-                                PoolStats, programs_from_batch)
+                                JournalError, PoolStats,
+                                programs_from_batch)
+from repro.core.checkpoint import (FaultInjected, FaultPlan, ReplicaRun,
+                                   SnapshotError, atomic_dir,
+                                   latest_snapshot, load_snapshot,
+                                   restore_session, run_replica,
+                                   save_snapshot, trace_digest)
 from repro.core.engine import (ENGINES, MODE_FAST, MODE_PREFIX, MODE_SPEC,
                                MODE_UNSET, Engine, EngineDef, ExecTrace,
                                get_engine, make_trace)
@@ -61,7 +73,8 @@ from repro.core.occ import OccTrace, occ_execute
 from repro.core.pcc import PccTrace, pcc_execute
 from repro.core.pogl import pogl_execute
 from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
-                                  RoundRobinSequencer, seq_to_order)
+                                  RoundRobinSequencer, seq_to_order,
+                                  sequencer_from_state, sequencer_state)
 from repro.core.session import PotSession
 from repro.core.tstore import (DenseStore, ShardedStore, StoreLayout, TStore,
                                dense_image, fingerprint, make_store,
@@ -86,7 +99,12 @@ __all__ = [
     "seq_to_order",
     # deterministic ingress (admission pool + priority-drain former)
     "IngressPool", "FormedBatch", "AdmitResult", "PoolStats",
-    "programs_from_batch",
+    "programs_from_batch", "JournalError",
+    # crash-consistent snapshots + deterministic replica failover
+    "SnapshotError", "atomic_dir", "save_snapshot", "load_snapshot",
+    "latest_snapshot", "restore_session", "run_replica", "ReplicaRun",
+    "FaultPlan", "FaultInjected", "trace_digest",
+    "sequencer_state", "sequencer_from_state",
     # deprecated per-engine entry points
     "pcc_execute", "PccTrace",
     "occ_execute", "OccTrace",

@@ -78,6 +78,13 @@ drain-free view: feed it to N replicas, let each drain under its own
 budgets/interleavings, and every replica emits the same flat
 transaction sequence (and therefore bit-identical stores through
 ``PotSession``) for any drain schedules that cover the same prefix.
+Journal loading is defensive: :meth:`IngressPool.replay` /
+:meth:`IngressPool.apply` validate every event (shape, kind, arity,
+field types, stamp monotonicity) and raise :class:`JournalError` with
+the failing index instead of diverging on a truncated, reordered, or
+corrupted feed — a replica must prove its feed well-formed before
+serving it (the failover restore path in ``repro.core.checkpoint``
+rides on ``apply``).
 """
 
 from __future__ import annotations
@@ -101,6 +108,22 @@ EV_CONFIG, EV_SPAWN, EV_STOP, EV_ADMIT, EV_DRAIN = (
 _CONFIG_KEYS = ("capacity", "evict_to", "backpressure_at", "fee_weight",
                 "age_weight", "age_unit", "size_weight",
                 "ladder_window")
+
+# event arity per kind (including the kind tag itself) — the cheap
+# structural gate journal loading applies before touching pool state
+_EV_ARITY = {EV_CONFIG: 2, EV_SPAWN: 3, EV_STOP: 2, EV_ADMIT: 5,
+             EV_DRAIN: 2}
+
+
+class JournalError(ValueError):
+    """A journal failed validation: truncated, reordered, or corrupted.
+
+    Raised by :meth:`IngressPool.replay` / :meth:`IngressPool.apply`
+    with the failing event's index, instead of letting a malformed
+    tuple fail deep inside drain/``make_batch`` with an opaque shape
+    error.  The journal IS the replication substrate — a replica must
+    refuse a feed it cannot prove well-formed rather than diverge.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -322,6 +345,13 @@ class IngressPool:
                 "empty program: an n_ins == 0 row is the vacant-row "
                 "padding convention and would never commit; admit a "
                 "single NOP instead")
+        for i, ins in enumerate(program):
+            # fail at admission, not deep inside drain's make_batch
+            if len(ins) != 4:
+                raise ValueError(
+                    f"program instruction {i} has {len(ins)} fields, "
+                    f"expected 4 (opcode, addr, indirect, operand): "
+                    f"{ins!r}")
         if lane in self._stopped:
             self.stats.rejected += 1
             return AdmitResult(False, -1, self._stamp, -1, (),
@@ -468,35 +498,124 @@ class IngressPool:
         the same flat transaction sequence."""
         return [ev for ev in self._journal if ev[0] != EV_DRAIN]
 
+    @staticmethod
+    def _check_event(ev, index: int) -> tuple:
+        """Structural validation of one journal event (defensive journal
+        loading): shape, kind, arity, field types.  Accepts the tuple
+        form and its JSON round-trip (lists); raises
+        :class:`JournalError` naming the failing index."""
+        if not isinstance(ev, (tuple, list)) or not ev:
+            raise JournalError(
+                f"journal event {index} is not an event tuple: {ev!r} "
+                "(journal corrupted?)")
+        kind = ev[0]
+        if kind not in _EV_ARITY:
+            raise JournalError(
+                f"journal event {index} has unknown kind {kind!r} "
+                "(journal corrupted?)")
+        if len(ev) != _EV_ARITY[kind]:
+            raise JournalError(
+                f"journal event {index} ({kind!r}) has {len(ev)} fields, "
+                f"expected {_EV_ARITY[kind]} — truncated or corrupted "
+                f"event: {ev!r}")
+        if kind == EV_ADMIT:
+            _, stamp, lane, fee, program = ev
+            for field, val in (("stamp", stamp), ("lane", lane),
+                               ("fee", fee)):
+                if not isinstance(val, (int, np.integer)) \
+                        or isinstance(val, bool):
+                    raise JournalError(
+                        f"journal event {index} (admit) has non-integer "
+                        f"{field} {val!r} (journal corrupted?)")
+            if not isinstance(program, (tuple, list)) or not program:
+                raise JournalError(
+                    f"journal event {index} (admit) has no program "
+                    f"(truncated event?): {program!r}")
+            for i, ins in enumerate(program):
+                if not isinstance(ins, (tuple, list)) or len(ins) != 4:
+                    raise JournalError(
+                        f"journal event {index} (admit) instruction {i} "
+                        f"is not a 4-field tuple: {ins!r} (journal "
+                        "corrupted?)")
+        elif kind in (EV_SPAWN, EV_STOP, EV_DRAIN):
+            if not isinstance(ev[1], (int, np.integer)) \
+                    or isinstance(ev[1], bool):
+                raise JournalError(
+                    f"journal event {index} ({kind!r}) has non-integer "
+                    f"argument {ev[1]!r} (journal corrupted?)")
+        return tuple(ev)
+
+    def apply(self, events: Iterable[tuple], *,
+              base_index: int = 0) -> list[FormedBatch]:
+        """Apply a validated journal suffix to THIS pool (the restore /
+        catch-up path: a replica restored from a snapshot feeds the
+        arrival-journal events its snapshot had not yet seen).
+
+        Every event is structurally validated before touching pool
+        state, and semantic violations (a stamp running backwards = a
+        reordered journal; lane events against an impossible lane tree)
+        are wrapped as :class:`JournalError` with the failing event's
+        index.  Returns the FormedBatches produced by replayed drains.
+        """
+        formed: list[FormedBatch] = []
+        for i, ev in enumerate(events):
+            index = base_index + i
+            ev = self._check_event(ev, index)
+            kind = ev[0]
+            if kind == EV_CONFIG:
+                raise JournalError(
+                    f"journal event {index} is a config event mid-"
+                    "journal — journals were concatenated or reordered")
+            try:
+                if kind == EV_SPAWN:
+                    self.spawn_lane(ev[1], parent=ev[2])
+                elif kind == EV_STOP:
+                    self.stop_lane(ev[1])
+                elif kind == EV_ADMIT:
+                    _, stamp, lane, fee, program = ev
+                    self.admit(program, lane=lane, fee=fee, stamp=stamp)
+                else:   # EV_DRAIN (kinds are exhaustive per _check_event)
+                    fb = self.drain(ev[1])
+                    if fb is not None:
+                        formed.append(fb)
+            except JournalError:
+                raise
+            except (KeyError, ValueError) as e:
+                raise JournalError(
+                    f"journal event {index} ({kind!r}) cannot apply: {e} "
+                    "— reordered or corrupted journal") from e
+        return formed
+
     @classmethod
     def replay(cls, journal: Iterable[tuple]
                ) -> tuple["IngressPool", list[FormedBatch]]:
         """Feed a journal through a fresh pool.  Reproduces the original
         pool bit-exactly: admissions (with their original stamps),
         evictions, lane events, and — for journaled drains — the exact
-        FormedBatch stream, in order.  Returns ``(pool, formed)``."""
+        FormedBatch stream, in order.  Returns ``(pool, formed)``.
+
+        Defensive by construction (:class:`JournalError`): the journal
+        must lead with a well-formed config event carrying exactly the
+        replica-affecting knobs, and every subsequent event is validated
+        by :meth:`apply` before it touches pool state."""
         journal = list(journal)
-        if not journal or journal[0][0] != EV_CONFIG:
-            raise ValueError(
+        if not journal:
+            raise JournalError("empty journal: not even a config event "
+                               "(was the feed truncated?)")
+        head = cls._check_event(journal[0], 0)
+        if head[0] != EV_CONFIG:
+            raise JournalError(
                 "journal must start with its config event (was this "
                 "sliced without IngressPool.journal()?)")
-        pool = cls(**journal[0][1])
-        formed: list[FormedBatch] = []
-        for ev in journal[1:]:
-            kind = ev[0]
-            if kind == EV_SPAWN:
-                pool.spawn_lane(ev[1], parent=ev[2])
-            elif kind == EV_STOP:
-                pool.stop_lane(ev[1])
-            elif kind == EV_ADMIT:
-                _, stamp, lane, fee, program = ev
-                pool.admit(program, lane=lane, fee=fee, stamp=stamp)
-            elif kind == EV_DRAIN:
-                fb = pool.drain(ev[1])
-                if fb is not None:
-                    formed.append(fb)
-            else:
-                raise ValueError(f"unknown journal event kind {kind!r}")
+        cfg = head[1]
+        if not isinstance(cfg, dict) or set(cfg) != set(_CONFIG_KEYS):
+            raise JournalError(
+                f"journal config event carries keys "
+                f"{sorted(cfg) if isinstance(cfg, dict) else cfg!r}, "
+                f"expected exactly {sorted(_CONFIG_KEYS)} (journal from "
+                "an incompatible pool version, or corrupted)")
+        pool = cls(**cfg)
+        formed = pool.apply(journal[1:], base_index=1)
         return pool, formed
 
     # ------------------------------------------------------ observables

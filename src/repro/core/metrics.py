@@ -63,6 +63,11 @@ class EngineReport:
     spec_invalidated: int = 0  # speculated rows re-executed (stale reads)
     spec_rounds: int = 0     # revalidation re-execution passes (0 or 1)
     pipeline_depth: int = 0  # the session's speculation window depth
+    # -- failover observables (PR 9): filled from the session ----------
+    snapshots_taken: int = 0   # crash-consistent snapshots committed
+    restored_from: int = -1    # snapshot id the session restored from
+    #                            (-1: never restored)
+    recovery_batches: int = 0  # batches executed since the restore
 
     def row(self) -> str:
         return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
@@ -73,14 +78,16 @@ class EngineReport:
                 f"{self.queue_depth},{self.admitted},{self.evicted},"
                 f"{self.drained},{self.backpressure},{self.spec_executed},"
                 f"{self.spec_invalidated},{self.spec_rounds},"
-                f"{self.pipeline_depth}")
+                f"{self.pipeline_depth},{self.snapshots_taken},"
+                f"{self.restored_from},{self.recovery_batches}")
 
 
 HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
           "fast_commits,prefix_commits,throughput,wave_trips,live_txns,"
           "walked_slots,compile_count,queue_depth,admitted,evicted,"
           "drained,backpressure,spec_executed,spec_invalidated,"
-          "spec_rounds,pipeline_depth")
+          "spec_rounds,pipeline_depth,snapshots_taken,restored_from,"
+          "recovery_batches")
 
 
 def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
@@ -131,6 +138,10 @@ def report_from_trace(name: str, trace, batch, res_rn, res_wn,
     if session is not None:
         rep.compile_count = session.compile_count()
         rep.pipeline_depth = int(getattr(session, "pipeline_depth", 0))
+        # PR 9 failover observables (defaulted for session-like stubs)
+        rep.snapshots_taken = int(getattr(session, "snapshots_taken", 0))
+        rep.restored_from = int(getattr(session, "restored_from", -1))
+        rep.recovery_batches = int(getattr(session, "recovery_batches", 0))
     if pool is not None:
         obs = pool.observables()
         rep.queue_depth = obs["queue_depth"]

@@ -193,6 +193,62 @@ class ExplicitSequencer:
         return np.asarray([pos[n] for n in names], np.int64)
 
 
+def sequencer_state(seq) -> dict:
+    """Serialize a sequencer's cursor as a JSON-clean dict (the snapshot
+    form — repro.core.checkpoint stores it in the manifest).
+
+    The three built-in sequencers round-trip exactly through
+    :func:`sequencer_from_state`; anything else serializes as an
+    ``{"type": "opaque"}`` marker, and restoring such a snapshot
+    requires passing an explicitly reconstructed ``sequencer=``.
+    """
+    if isinstance(seq, RoundRobinSequencer):
+        return {
+            "type": "round_robin",
+            "lanes": [[l.lane_id, l.parent, list(l.children), l.alive]
+                      for l in seq.lanes.values()],
+            "next_sn": seq._next_sn,
+            "pending": {str(k): list(v) for k, v in seq._pending.items()},
+            "order_log": [[sn, lid] for sn, lid in seq._order_log],
+        }
+    if isinstance(seq, ReplaySequencer):
+        return {"type": "replay", "order": list(seq._order),
+                "consumed": seq._consumed, "offset": seq._offset}
+    if isinstance(seq, ExplicitSequencer):
+        return {"type": "explicit", "order": list(seq._order)}
+    return {"type": "opaque", "class": type(seq).__name__}
+
+
+def sequencer_from_state(state: dict):
+    """Rebuild a sequencer from :func:`sequencer_state` output — the
+    restored cursor continues the SAME global numbering, which is what
+    lets a restored replica rejoin the serialization order mid-stream."""
+    kind = state["type"]
+    if kind == "round_robin":
+        s = RoundRobinSequencer(n_root_lanes=0)
+        s.lanes = {
+            int(l[0]): Lane(int(l[0]),
+                            None if l[1] is None else int(l[1]),
+                            [int(c) for c in l[2]], bool(l[3]))
+            for l in state["lanes"]}
+        s._next_sn = int(state["next_sn"])
+        s._pending = {int(k): [int(x) for x in v]
+                      for k, v in state["pending"].items()}
+        s._order_log = [(int(sn), int(lid))
+                        for sn, lid in state["order_log"]]
+        return s
+    if kind == "replay":
+        s = ReplaySequencer(state["order"])
+        s._consumed = int(state["consumed"])
+        s._offset = int(state["offset"])
+        return s
+    if kind == "explicit":
+        return ExplicitSequencer(state["order"])
+    raise ValueError(
+        f"cannot reconstruct sequencer state of type {kind!r}; restore "
+        "with an explicit sequencer= instead")
+
+
 def seq_to_order(seq: np.ndarray) -> np.ndarray:
     """(K,) 1-based sequence numbers -> (K,) permutation: order[p] = txn
     index holding sequence position p+1."""

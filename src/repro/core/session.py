@@ -73,6 +73,17 @@ speculation cost is surfaced only in the new ``ExecTrace.spec_*``
 observables.  ``D=0`` (default) is exactly the pre-PR path; engines
 without a seeded entry point (``raw_spec is None``) fall back to it.
 
+**Crash-consistent checkpoints** (PR 9): ``snapshot(dir, pool=...)`` /
+``PotSession.restore(dir, arrival_journal=...)`` round-trip the complete
+resumable state — store image, ``gv``, sequencer cursor, submit / formed
+counters, bucket bookkeeping, replay log, elastic lane-manager state,
+and the ingress journal cursor — through the atomic, self-verifying
+snapshot format of :mod:`repro.core.checkpoint`.  The recovery
+invariant: restore(latest snapshot) + drain(arrival-journal suffix) is
+bit-identical to the uninterrupted stream at any snapshot point, any
+drain-budget schedule, any ``pipeline_depth`` (the speculative window
+is flushed into the snapshot, never persisted speculatively).
+
 Every engine runs through the same ``submit`` — there is no per-engine
 signature anywhere above this layer.
 """
@@ -185,7 +196,8 @@ class PotSession:
                  engine: str | EngineDef = "pcc", sequencer=None,
                  n_lanes: int = 1, donate: bool = True,
                  bucket: bool = True, bucket_ladder: str = "pow2",
-                 shards: int = 1, mesh=None, pipeline_depth: int = 0):
+                 shards: int = 1, mesh=None, pipeline_depth: int = 0,
+                 elastic=None):
         if store is None:
             if n_objects is None:
                 raise ValueError("PotSession needs n_objects or store")
@@ -232,6 +244,20 @@ class PotSession:
         # compile-cache observables: step shapes this session triggered
         # (one XLA compile each) and batches submitted per bucket
         self._bucket_counts: dict[tuple[int, int], int] = {}
+        # elastic worker pool (runtime.elastic.ElasticLaneManager or
+        # None): scaling events apply at formed-batch boundaries and
+        # client lanes map onto live worker lanes — snapshot-visible
+        # state, so a restored replica numbers lanes identically
+        self.elastic = elastic
+        # failover bookkeeping (PR 9): formed-batch cursor (the budget-
+        # schedule index a restored replica re-enters at), snapshot
+        # chain state, and the restore observables the metrics CSV
+        # surfaces (snapshots_taken / restored_from / recovery_batches)
+        self._batches_formed = 0
+        self.snapshots_taken = 0
+        self.restored_from = -1       # snapshot id, or -1 (never restored)
+        self._chain_digest = ""       # last committed snapshot's chain
+        self._next_snapshot_id = 0
 
     # ------------------------------------------------------------- stream
     def _bucket_shape(self, batch: TxnBatch,
@@ -351,9 +377,37 @@ class PotSession:
             out.append(self._spec_drain())
         return out
 
+    def _serve_formed(self, fb, ladder: str | None = None
+                      ) -> list[ExecTrace]:
+        """Execute one ingress-formed batch (the unit step of ``serve``
+        and of the failover replica loop in ``repro.core.checkpoint``).
+
+        Advances the elastic lane manager to this formed-batch boundary
+        (scaling events are positions in the order — a restored replica
+        re-applies them identically) and maps client lanes onto live
+        worker lanes; bumps the formed-batch cursor; then submits —
+        through the speculation window when pipelined.  Returns the
+        traces completed by this step (possibly none while the window
+        fills)."""
+        fb_ladder = ladder if ladder is not None else fb.ladder
+        lanes = fb.lanes
+        if self.elastic is not None:
+            self.elastic.advance_to(self._batches_formed + 1)
+            lanes = np.asarray([self.elastic.worker_for(int(l))
+                                for l in np.asarray(fb.lanes)], np.int64)
+        self._batches_formed += 1
+        if self._pipelined:
+            self._spec_enqueue(fb.batch, fb.seq, lanes, ladder=fb_ladder)
+            out = []
+            while len(self._window) > self.pipeline_depth:
+                out.append(self._spec_drain())
+            return out
+        return [self._submit_seq(fb.batch, fb.seq, lanes,
+                                 ladder=fb_ladder)]
+
     def serve(self, pool, budget: int = 64, *,
               max_batches: int | None = None,
-              ladder: str | None = None) -> list[ExecTrace]:
+              ladder: str | None = None, elastic=None) -> list[ExecTrace]:
         """Drain an :class:`~repro.core.ingress.IngressPool` through the
         session until it is empty (or ``max_batches``): the deterministic
         ingress serve loop.
@@ -374,7 +428,15 @@ class PotSession:
         for ANY budget schedules that drain the same prefix — and for
         any ``pipeline_depth`` (speculation changes when work runs, not
         what commits; the window drains fully before returning).
+
+        ``elastic`` optionally attaches an
+        :class:`~repro.runtime.elastic.ElasticLaneManager`: worker
+        join/leave events apply at formed-batch boundaries and client
+        lanes map onto live worker lanes (sequenced, snapshot-visible
+        scaling — see ``_serve_formed``).
         """
+        if elastic is not None:
+            self.elastic = elastic
         traces: list[ExecTrace] = []
         formed = 0
         while max_batches is None or formed < max_batches:
@@ -382,15 +444,7 @@ class PotSession:
             if fb is None:
                 break
             formed += 1
-            fb_ladder = ladder if ladder is not None else fb.ladder
-            if self._pipelined:
-                self._spec_enqueue(fb.batch, fb.seq, fb.lanes,
-                                   ladder=fb_ladder)
-                while len(self._window) > self.pipeline_depth:
-                    traces.append(self._spec_drain())
-            else:
-                traces.append(self._submit_seq(fb.batch, fb.seq, fb.lanes,
-                                               ladder=fb_ladder))
+            traces.extend(self._serve_formed(fb, ladder=ladder))
         traces.extend(self._spec_flush())
         return traces
 
@@ -449,6 +503,46 @@ class PotSession:
     def gv(self) -> int:
         """Global version = sequence number of the last commit."""
         return int(self.store.gv)
+
+    @property
+    def batches_formed(self) -> int:
+        """Ingress-formed batches executed (or enqueued) by this session
+        — the deterministic cursor a restored replica re-enters its
+        budget/snapshot/scaling schedules at."""
+        return self._batches_formed
+
+    @property
+    def recovery_batches(self) -> int:
+        """Batches this session executed SINCE restoring from a
+        snapshot (0 for a session that never restored) — the recovery-
+        cost observable in the metrics CSV."""
+        return len(self.traces) if self.restored_from >= 0 else 0
+
+    # --------------------------------------------------- crash recovery
+    def snapshot(self, directory: str, *, pool=None,
+                 _torn_hook=None) -> str:
+        """Commit one crash-consistent snapshot of this session (and the
+        ingress ``pool`` feeding it) under ``directory`` — the complete
+        resumable state, written atomically and self-verifying; the
+        speculative window is flushed first (never persisted
+        speculatively).  Returns the committed snapshot path.  See
+        :func:`repro.core.checkpoint.save_snapshot`."""
+        from repro.core import checkpoint as _ckpt
+        return _ckpt.save_snapshot(self, directory, pool=pool,
+                                   _torn_hook=_torn_hook)
+
+    @classmethod
+    def restore(cls, directory: str, **overrides
+                ) -> "tuple[PotSession, object]":
+        """Rebuild ``(session, pool)`` from the newest complete snapshot
+        under ``directory`` (self-verified before serving); restoring
+        mid-stream and draining the remaining arrival-journal suffix is
+        bit-identical to the uninterrupted run.  Keyword overrides
+        (``step=``, ``arrival_journal=``, ``shards=``, ``engine=``,
+        ``bucket_ladder=``, ``pipeline_depth=``, ...) pass through to
+        :func:`repro.core.checkpoint.restore_session`."""
+        from repro.core import checkpoint as _ckpt
+        return _ckpt.restore_session(directory, **overrides)
 
     def fingerprint(self) -> int:
         """Order-sensitive hash of the committed store image."""

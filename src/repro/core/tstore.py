@@ -246,6 +246,26 @@ def unshard_store(store) -> TStore:
         gv=store.gv)
 
 
+def shard_images(store) -> list[tuple[jax.Array, jax.Array]]:
+    """Per-shard ``(values, versions)`` images, trimmed to real rows.
+
+    The snapshot serialization form (repro.core.checkpoint): one image
+    per shard — (C, slot) values + (C,) versions, with the last shard's
+    padding rows dropped — whose concatenation IS the dense store image.
+    A dense store yields its single full image.  Because the shards are
+    contiguous address ranges, a snapshot written at S shards restores
+    into any S' by concatenating and re-sharding.
+    """
+    if isinstance(store, TStore):
+        return [(store.values, store.versions)]
+    o, c = store.n_objects, store.shard_size
+    out = []
+    for s in range(store.shards):
+        rows = min(o, (s + 1) * c) - min(o, s * c)
+        out.append((store.values[s, :rows], store.versions[s, :rows]))
+    return out
+
+
 def dense_image(store) -> jax.Array:
     """The (O, slot) committed image of any store layout."""
     if isinstance(store, ShardedStore):

@@ -8,6 +8,17 @@ deterministic point in the order; a leaving worker's lane is stopped the
 same way.  Two runs with the same join/leave schedule (in *logical* time,
 i.e. sequence positions — not wall-clock) produce identical transaction
 orders, so scaling events never fork replicas.
+
+Since PR 9 the manager is wired through ``PotSession`` (the session's
+``elastic`` attribute / ``serve(..., elastic=...)``): before executing
+the batch formed at index b the session calls ``advance_to(b + 1)`` —
+scaling events take effect at *formed-batch boundaries*, which are
+positions in the deterministic order — and maps each row's client lane
+to a live worker lane via :meth:`worker_for`.  The manager's state
+(events + the round cursor) is snapshot-visible
+(:meth:`state_dict` / :meth:`from_state`, carried by
+``repro.core.checkpoint`` manifests), so a replica restored across a
+scaling event numbers lanes identically to the uninterrupted run.
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ class ElasticLaneManager:
     and a sequencer whose numbering reflects joins/leaves."""
 
     def __init__(self, n_initial: int, events: list[ScalingEvent] = ()):
+        self.n_initial = int(n_initial)
         self.seq = RoundRobinSequencer(n_root_lanes=n_initial)
         self.events = sorted(events, key=lambda e: (e.at_round, e.action,
                                                     e.lane_id or -1))
@@ -52,3 +64,38 @@ class ElasticLaneManager:
 
     def assign(self, txn_lanes) -> "list[int]":
         return self.seq.order_for(txn_lanes)
+
+    def worker_for(self, key: int) -> int:
+        """Deterministically place a client key on a live worker lane:
+        modular assignment over the post-order lane traversal.  Pure in
+        (key, lane-tree state), so two replicas at the same round map
+        every key identically — including across join/leave events."""
+        order = self.live_lanes()
+        if not order:
+            raise RuntimeError(
+                "no live worker lanes: every lane has left the pool")
+        return order[int(key) % len(order)]
+
+    # ------------------------------------------------- snapshot state
+    def state_dict(self) -> dict:
+        """JSON-clean state: initial width, the round cursor, and the
+        full event schedule (applied join events carry their assigned
+        lane ids, so re-application is exact)."""
+        return {
+            "n_initial": self.n_initial,
+            "round": self._round,
+            "events": [[e.at_round, e.action, e.lane_id, e.parent]
+                       for e in self.events],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "ElasticLaneManager":
+        """Rebuild a manager at the same round: replays the event
+        schedule through a fresh lane tree (spawn/stop are deterministic,
+        so the tree — and therefore :meth:`worker_for` — is identical)."""
+        mgr = cls(state["n_initial"],
+                  [ScalingEvent(int(r), a,
+                                None if l is None else int(l), int(p))
+                   for r, a, l, p in state["events"]])
+        mgr.advance_to(int(state["round"]))
+        return mgr

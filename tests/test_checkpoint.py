@@ -1,0 +1,354 @@
+"""Crash-consistent session snapshots (PR 9): format + recovery invariant.
+
+Properties:
+  C1  Atomic commit: atomic_dir materializes a directory all-or-nothing
+      — a failure mid-write leaves the previous contents (and a *.tmp*
+      turd readers skip), never a half-written final dir.
+  C2  Self-verification: a snapshot proves itself complete before
+      serving — per-file sha256 digests, the store fingerprint, and the
+      chained snapshot digest all re-verify; any corruption raises
+      SnapshotError, and latest_snapshot falls back to the newest
+      snapshot that verifies.
+  C3  Recovery invariant: restore(snapshot) + drain(arrival-journal
+      suffix) is bit-identical (fingerprints, traces, replay_log()) to
+      the uninterrupted run — at any snapshot point (including batch 0
+      and after the final batch), under different drain-budget
+      schedules, across store reshards S -> S' and bucket-ladder
+      changes, and idempotently (restoring twice changes nothing).
+  C4  Sequencer cursors round-trip: a RoundRobinSequencer snapshotted
+      mid-refill (pending numbers outstanding) resumes the SAME global
+      numbering; replay/explicit sequencers round-trip too.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (IngressPool, PotSession, SnapshotError,
+                        latest_snapshot, load_snapshot, restore_session,
+                        sequencer_from_state, sequencer_state,
+                        trace_digest)
+from repro.core import workloads as W
+from repro.core.checkpoint import atomic_dir, snapshot_ids
+from repro.core.ingress import programs_from_batch
+from repro.core.sequencer import (ExplicitSequencer, ReplaySequencer,
+                                  RoundRobinSequencer)
+
+from _hypothesis_compat import given, settings, st
+
+N_OBJECTS = 64
+N_LANES = 6
+BUDGETS = (7, 11)
+
+
+def _journal(n_txns=60, seed=3):
+    wl = W.counters(n_txns=n_txns, n_objects=N_OBJECTS, n_reads=2,
+                    n_writes=2, n_lanes=N_LANES, skew=0.7, seed=seed)
+    pool = IngressPool(capacity=512)
+    for i, p in enumerate(programs_from_batch(wl.batch)):
+        pool.admit(p, lane=i % N_LANES, fee=i % 5)
+    return pool.arrival_journal()
+
+
+JOURNAL = _journal()
+
+
+def _session(**kw):
+    kw.setdefault("engine", "pcc")
+    kw.setdefault("n_lanes", N_LANES)
+    return PotSession(N_OBJECTS, **kw)
+
+
+def _drain_through(session, pool, budgets=BUDGETS):
+    """The deterministic replica loop body: budgets indexed by the
+    formed-batch cursor, so a restored session re-enters the schedule
+    where the snapshot left it."""
+    while True:
+        fb = pool.drain(budgets[session.batches_formed % len(budgets)])
+        if fb is None:
+            break
+        session._serve_formed(fb)
+    session._spec_flush()
+    return session
+
+
+def _uninterrupted(**kw):
+    pool, _ = IngressPool.replay(JOURNAL)
+    return _drain_through(_session(**kw), pool)
+
+
+def _interrupted(tmp_path, snapshot_after, budgets=BUDGETS, restore_kw=None,
+                 **kw):
+    """Serve ``snapshot_after`` batches, snapshot, restore into a fresh
+    session, finish the stream there.  Returns the restored session."""
+    pool, _ = IngressPool.replay(JOURNAL)
+    s = _session(**kw)
+    for _ in range(snapshot_after):
+        fb = pool.drain(budgets[s.batches_formed % len(budgets)])
+        if fb is None:
+            break
+        s._serve_formed(fb)
+    s.snapshot(str(tmp_path), pool=pool)
+    s2, p2 = PotSession.restore(str(tmp_path), arrival_journal=JOURNAL,
+                                **(restore_kw or {}))
+    return _drain_through(s2, p2, budgets)
+
+
+def _assert_bitwise_equal(restored, baseline):
+    assert restored.fingerprint() == baseline.fingerprint()
+    assert restored.replay_log() == baseline.replay_log()
+    assert restored.gv == baseline.gv
+    assert restored.n_txns == baseline.n_txns
+    bd = [trace_digest(t) for t in baseline.traces]
+    rd = [trace_digest(t) for t in restored.traces]
+    assert rd == bd[len(bd) - len(rd):]
+
+
+# ------------------------------------------------------------- C1 atomic
+def test_atomic_dir_commits_all_or_nothing(tmp_path):
+    final = str(tmp_path / "out")
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, "a.txt"), "w") as f:
+            f.write("v1")
+    assert open(os.path.join(final, "a.txt")).read() == "v1"
+
+    # a failure mid-write must leave v1 intact and the turd visible
+    with pytest.raises(RuntimeError, match="boom"):
+        with atomic_dir(final) as tmp:
+            with open(os.path.join(tmp, "a.txt"), "w") as f:
+                f.write("v2")
+            raise RuntimeError("boom")
+    assert open(os.path.join(final, "a.txt")).read() == "v1"
+    assert os.path.isdir(final + ".tmp")
+
+    # the next attempt replaces the turd and commits
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, "a.txt"), "w") as f:
+            f.write("v3")
+    assert open(os.path.join(final, "a.txt")).read() == "v3"
+    assert not os.path.exists(final + ".tmp")
+
+
+# ---------------------------------------------------- C2 self-verification
+def test_snapshot_self_verifies_and_detects_corruption(tmp_path):
+    pool, _ = IngressPool.replay(JOURNAL)
+    s = _session()
+    for _ in range(2):
+        s._serve_formed(pool.drain(8))
+    path = s.snapshot(str(tmp_path), pool=pool)
+    load_snapshot(path)     # verifies digests + fingerprint + chain
+
+    # corrupt the store payload: the file digest catches it
+    store_file = os.path.join(path, "store.npz")
+    data = open(store_file, "rb").read()
+    with open(store_file, "wb") as f:
+        f.write(data[: len(data) // 2])
+    with pytest.raises(SnapshotError, match="corrupted"):
+        load_snapshot(path)
+
+
+def test_latest_snapshot_falls_back_past_corruption(tmp_path):
+    pool, _ = IngressPool.replay(JOURNAL)
+    s = _session()
+    s._serve_formed(pool.drain(8))
+    p0 = s.snapshot(str(tmp_path), pool=pool)
+    s._serve_formed(pool.drain(8))
+    p1 = s.snapshot(str(tmp_path), pool=pool)
+    assert snapshot_ids(str(tmp_path)) == [0, 1]
+    assert latest_snapshot(str(tmp_path)) == p1
+    # corrupt the newest: the latest COMPLETE snapshot is the older one
+    os.remove(os.path.join(p1, "store.npz"))
+    assert latest_snapshot(str(tmp_path)) == p0
+
+
+def test_chain_digest_detects_tampered_manifest(tmp_path):
+    import json
+    pool, _ = IngressPool.replay(JOURNAL)
+    s = _session()
+    s._serve_formed(pool.drain(8))
+    path = s.snapshot(str(tmp_path), pool=pool)
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["replay_log"] = list(reversed(manifest["replay_log"]))
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(SnapshotError, match="chain digest"):
+        load_snapshot(path)
+
+
+def test_restore_refuses_empty_directory(tmp_path):
+    with pytest.raises(SnapshotError, match="no complete snapshot"):
+        restore_session(str(tmp_path))
+
+
+# ------------------------------------------------- C3 recovery invariant
+def test_restore_midstream_is_bitwise_identical(tmp_path):
+    base = _uninterrupted()
+    restored = _interrupted(tmp_path, snapshot_after=3)
+    assert restored.restored_from == 0
+    assert restored.recovery_batches == len(restored.traces) > 0
+    _assert_bitwise_equal(restored, base)
+
+
+def test_snapshot_at_batch_zero(tmp_path):
+    base = _uninterrupted()
+    restored = _interrupted(tmp_path, snapshot_after=0)
+    # the whole stream replays from the empty snapshot
+    assert restored.n_txns == base.n_txns
+    _assert_bitwise_equal(restored, base)
+
+
+def test_snapshot_after_final_batch(tmp_path):
+    base = _uninterrupted()
+    restored = _interrupted(tmp_path, snapshot_after=99)
+    # nothing left to drain: the restored session IS the final state
+    assert restored.recovery_batches == 0
+    _assert_bitwise_equal(restored, base)
+
+
+def test_restore_under_a_different_budget_schedule(tmp_path):
+    """The snapshot pins the formed-batch cursor, not the budgets: a
+    replica restoring into a different schedule still converges to that
+    schedule's uninterrupted stream (PCC: budget-partition invariant)."""
+    pool, _ = IngressPool.replay(JOURNAL)
+    base = _drain_through(_session(), pool, budgets=(5, 9, 3))
+    restored = _interrupted(tmp_path, snapshot_after=2, budgets=(5, 9, 3))
+    _assert_bitwise_equal(restored, base)
+
+
+def test_restore_into_different_shards(tmp_path):
+    base = _uninterrupted()
+    restored = _interrupted(tmp_path, snapshot_after=3,
+                            restore_kw={"shards": 4}, shards=8)
+    assert restored.store.layout.shards == 4
+    _assert_bitwise_equal(restored, base)
+    # and back down to the dense store
+    dense = _interrupted(tmp_path, snapshot_after=2,
+                         restore_kw={"shards": 1}, shards=8)
+    assert dense.store.layout.shards == 1
+    _assert_bitwise_equal(dense, base)
+
+
+def test_restore_into_different_bucket_ladder(tmp_path):
+    """Bucketing never changes commits (vacant rows), so restoring into
+    the other ladder family is still bit-identical."""
+    base = _uninterrupted(bucket_ladder="pow2")
+    restored = _interrupted(tmp_path, snapshot_after=3,
+                            restore_kw={"bucket_ladder": "dense",
+                                        "pipeline_depth": 2},
+                            bucket_ladder="pow2")
+    assert restored.bucket_ladder == "dense"
+    _assert_bitwise_equal(restored, base)
+
+
+def test_double_restore_is_idempotent(tmp_path):
+    base = _uninterrupted()
+    pool, _ = IngressPool.replay(JOURNAL)
+    s = _session()
+    for _ in range(3):
+        fb = pool.drain(BUDGETS[s.batches_formed % 2])
+        s._serve_formed(fb)
+    s.snapshot(str(tmp_path), pool=pool)
+
+    outcomes = []
+    for _ in range(2):      # restore TWICE from the same snapshot
+        s2, p2 = PotSession.restore(str(tmp_path), arrival_journal=JOURNAL)
+        _drain_through(s2, p2)
+        outcomes.append((s2.fingerprint(), tuple(s2.replay_log()),
+                         [trace_digest(t) for t in s2.traces]))
+        _assert_bitwise_equal(s2, base)
+    assert outcomes[0] == outcomes[1]
+
+    # restore -> snapshot (no new work) -> restore is also stable
+    s3, p3 = PotSession.restore(str(tmp_path), arrival_journal=JOURNAL)
+    s3.snapshot(str(tmp_path), pool=p3)
+    s4, p4 = PotSession.restore(str(tmp_path), arrival_journal=JOURNAL)
+    _drain_through(s4, p4)
+    _assert_bitwise_equal(s4, base)
+
+
+def test_pipelined_window_is_flushed_into_snapshot(tmp_path):
+    """pipeline_depth > 0: the speculative window is flushed (executed
+    and committed) by snapshot(), never persisted speculatively — the
+    manifest's txn count equals the committed count at that point."""
+    import json
+    base = _uninterrupted()
+    pool, _ = IngressPool.replay(JOURNAL)
+    s = _session(pipeline_depth=2)
+    for _ in range(3):
+        fb = pool.drain(BUDGETS[s.batches_formed % 2])
+        s._serve_formed(fb)
+    assert len(s._window) > 0          # speculation genuinely pending
+    path = s.snapshot(str(tmp_path), pool=pool)
+    assert len(s._window) == 0         # flushed, not persisted
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    assert manifest["n_txns"] == s.n_txns
+    s2, p2 = PotSession.restore(str(tmp_path), arrival_journal=JOURNAL)
+    _drain_through(s2, p2)
+    _assert_bitwise_equal(s2, base)
+
+
+# ------------------------------------------------- C4 sequencer cursors
+def test_run_stream_snapshot_restores_sequencer_cursor(tmp_path):
+    """The run_stream path (no pool): a RoundRobinSequencer snapshotted
+    mid-stream — with pending pre-assigned numbers outstanding — resumes
+    the same global numbering bit-exactly."""
+    wls = [W.counters(n_txns=k, n_objects=N_OBJECTS, n_reads=2,
+                      n_writes=2, n_lanes=3, skew=0.6, seed=10 + k)
+           for k in (5, 9, 7, 11)]
+    batches = [w.batch for w in wls]
+    lanes = [w.lanes.tolist() for w in wls]
+
+    base = PotSession(N_OBJECTS, engine="pcc", n_lanes=3)
+    base.run_stream(batches, lanes)
+
+    s = PotSession(N_OBJECTS, engine="pcc", n_lanes=3)
+    s.run_stream(batches[:2], lanes[:2])
+    assert any(s.sequencer._pending.values())   # cursor mid-refill
+    s.snapshot(str(tmp_path))
+    s2, pool2 = PotSession.restore(str(tmp_path))
+    assert pool2 is None                        # no pool was snapshotted
+    s2.run_stream(batches[2:], lanes[2:])
+    _assert_bitwise_equal(s2, base)
+
+
+def test_sequencer_state_roundtrip_unit():
+    r = RoundRobinSequencer(n_root_lanes=2)
+    r.spawn_lane(0)
+    r.order_for([0, 1, 2, 0])       # leaves pending numbers outstanding
+    r.stop_lane(1)
+    r2 = sequencer_from_state(sequencer_state(r))
+    assert r2.lanes.keys() == r.lanes.keys()
+    assert r2._pending == r._pending and r2._next_sn == r._next_sn
+    assert np.array_equal(r2.order_for([0, 2, 0]), r.order_for([0, 2, 0]))
+
+    rep = ReplaySequencer([1, 0, 2, 3])
+    rep.order_for([0, 0, 0])
+    rep2 = sequencer_from_state(sequencer_state(rep))
+    assert np.array_equal(rep2.order_for([0]), rep.order_for([0]))
+    assert rep2.remaining == rep.remaining == 0
+
+    ex = sequencer_from_state(sequencer_state(ExplicitSequencer(["a", "b"])))
+    assert np.array_equal(ex.order_for(["b", "a"]), [2, 1])
+
+    class Weird:
+        pass
+    assert sequencer_state(Weird())["type"] == "opaque"
+    with pytest.raises(ValueError, match="opaque"):
+        sequencer_from_state({"type": "opaque", "class": "Weird"})
+
+
+# ------------------------------------------- property: any snapshot point
+@settings(max_examples=5, deadline=None)
+@given(point=st.integers(min_value=0, max_value=6),
+       schedule=st.sampled_from([(7, 11), (5, 9, 3)]))
+def test_property_restored_equals_uninterrupted(tmp_path_factory, point,
+                                                schedule):
+    """C3 as a property: for ANY snapshot point and either budget
+    schedule, restored == uninterrupted fingerprints + replay logs."""
+    tmp_path = tmp_path_factory.mktemp("snap")
+    pool, _ = IngressPool.replay(JOURNAL)
+    base = _drain_through(_session(), pool, budgets=schedule)
+    restored = _interrupted(tmp_path, snapshot_after=point,
+                            budgets=schedule)
+    _assert_bitwise_equal(restored, base)

@@ -1,0 +1,94 @@
+"""Trainer-facing pytree checkpoints (repro.ckpt.checkpoint).
+
+The module rides on the shared :func:`repro.core.checkpoint.atomic_dir`
+commit helper (PR 9 factored it out of the old inline tmp/rename code),
+so the crash-safety tests here double as coverage for that helper under
+the trainer layout: a crash at ANY point mid-save leaves either the
+previous complete checkpoint or a ``*.tmp*`` turd that ``latest_step``
+and ``prune`` never list.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+
+
+def _state(seed=0):
+    k = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(k.normal(size=(4, 3)).astype("float32")),
+                   "b": jnp.asarray(k.normal(size=(3,)).astype("float32"))},
+        "opt": {"mu": jnp.zeros((4, 3)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    import jax
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_save_restore_round_trip_with_extra(tmp_path):
+    state = _state()
+    extra = {"gv": 123, "pipeline_step": 9}
+    path = ck.save(str(tmp_path), 5, state, extra=extra)
+    assert os.path.basename(path) == "step_5"
+    restored, got_extra = ck.restore(str(tmp_path), 5, _state(seed=1))
+    _assert_tree_equal(restored, state)
+    assert got_extra == extra
+
+
+def test_latest_step_ignores_tmp_turds(tmp_path):
+    assert ck.latest_step(str(tmp_path)) is None
+    ck.save(str(tmp_path), 1, _state())
+    ck.save(str(tmp_path), 3, _state())
+    os.makedirs(tmp_path / "step_9.tmp_0")       # simulated torn save
+    assert ck.latest_step(str(tmp_path)) == 3
+
+
+def test_overwrite_existing_step_wins(tmp_path):
+    ck.save(str(tmp_path), 2, _state(seed=0))
+    newer = _state(seed=42)
+    ck.save(str(tmp_path), 2, newer)
+    restored, _ = ck.restore(str(tmp_path), 2, _state(seed=1))
+    _assert_tree_equal(restored, newer)
+
+
+def test_crash_mid_save_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    ck.save(str(tmp_path), 1, _state(seed=0))
+    boom = RuntimeError("torn write")
+    real_savez = np.savez      # ck.np IS this numpy module: avoid recursion
+
+    def dying_savez(path, **kw):
+        real_savez(path, **kw)
+        with open(path, "r+b") as f:     # corrupt, then die pre-commit
+            f.truncate(8)
+        raise boom
+
+    monkeypatch.setattr(ck.np, "savez", dying_savez)
+    with pytest.raises(RuntimeError, match="torn write"):
+        ck.save(str(tmp_path), 2, _state(seed=1))
+    monkeypatch.undo()
+    # step_2 was never committed; step_1 still restores intact
+    assert ck.latest_step(str(tmp_path)) == 1
+    restored, _ = ck.restore(str(tmp_path), 1, _state(seed=3))
+    _assert_tree_equal(restored, _state(seed=0))
+
+
+def test_prune_keeps_newest_and_skips_turds(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, _state(seed=s))
+    os.makedirs(tmp_path / "step_0.tmp_0")
+    ck.prune(str(tmp_path), keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if "tmp" not in d)
+    assert kept == ["step_4", "step_5"]
+    assert (tmp_path / "step_0.tmp_0").is_dir()  # prune never touches turds
+    restored, _ = ck.restore(str(tmp_path), 5, _state(seed=9))
+    _assert_tree_equal(restored, _state(seed=5))

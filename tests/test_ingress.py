@@ -23,8 +23,8 @@ Properties (PR 6):
 import numpy as np
 import pytest
 
-from repro.core import (RMW, WRITE, IngressPool, PotSession,
-                        ReplaySequencer)
+from repro.core import (RMW, WRITE, IngressPool, JournalError,
+                        PotSession, ReplaySequencer)
 from repro.core import workloads as W
 from repro.core.ingress import dense_bucket, programs_from_batch
 from repro.core.txn import next_pow2
@@ -481,3 +481,92 @@ def test_metrics_csv_carries_ingress_observables():
     assert rep.queue_depth == 0 and rep.evicted == 0
     row = rep.row()
     assert len(row.split(",")) == len(M.HEADER.split(","))
+
+
+# -- defensive journal loading (PR 9): corrupt/reordered journals are a
+#    JournalError with a pointed message, never a silent divergence ------
+def _good_journal():
+    pool, _ = _interleaved_pool()
+    return pool.journal()
+
+
+def test_replay_rejects_empty_journal():
+    with pytest.raises(JournalError, match="empty"):
+        IngressPool.replay([])
+
+
+def test_replay_rejects_config_key_mismatch():
+    j = _good_journal()
+    kind, cfg = j[0]
+    bad = dict(cfg)
+    bad.pop(next(iter(cfg)))
+    with pytest.raises(JournalError, match="config"):
+        IngressPool.replay([(kind, bad)] + list(j[1:]))
+    bad = dict(cfg, bogus_knob=1)
+    with pytest.raises(JournalError, match="config"):
+        IngressPool.replay([(kind, bad)] + list(j[1:]))
+
+
+def test_replay_rejects_mid_journal_config():
+    j = list(_good_journal())
+    j.insert(len(j) // 2, j[0])
+    with pytest.raises(JournalError, match="concatenated|reordered"):
+        IngressPool.replay(j)
+
+
+def test_replay_rejects_truncated_and_unknown_events():
+    j = list(_good_journal())
+    i = next(k for k, ev in enumerate(j) if ev[0] == "admit")
+    with pytest.raises(JournalError, match="field"):
+        IngressPool.replay(j[:i] + [j[i][:3]] + j[i + 1:])
+    with pytest.raises(JournalError, match="unknown"):
+        IngressPool.replay(j[:i] + [("commit", 0)] + j[i + 1:])
+    with pytest.raises(JournalError, match="event"):
+        IngressPool.replay(j[:i] + ["admit"] + j[i + 1:])
+
+
+def test_replay_rejects_non_int_fields_and_bad_programs():
+    j = list(_good_journal())
+    i = next(k for k, ev in enumerate(j) if ev[0] == "admit")
+    kind, stamp, lane, fee, program = j[i]
+
+    def swap(ev):
+        return j[:i] + [ev] + j[i + 1:]
+
+    with pytest.raises(JournalError, match="int"):
+        IngressPool.replay(swap((kind, "soon", lane, fee, program)))
+    with pytest.raises(JournalError, match="int"):
+        IngressPool.replay(swap((kind, stamp, True, fee, program)))
+    with pytest.raises(JournalError, match="no program"):
+        IngressPool.replay(swap((kind, stamp, lane, fee, ())))
+    torn = (program[0][:3],) + tuple(program[1:])
+    with pytest.raises(JournalError, match="instruction"):
+        IngressPool.replay(swap((kind, stamp, lane, fee, torn)))
+
+
+def test_replay_wraps_semantic_errors_as_journal_error():
+    """A structurally well-formed event that the pool itself rejects
+    (decreasing stamp, unknown lane) marks a reordered/corrupted
+    journal — surfaced as JournalError, not a bare internal error."""
+    j = list(_good_journal())
+    idx = [k for k, ev in enumerate(j) if ev[0] == "admit"]
+    i, l = idx[0], idx[-1]
+    reordered = list(j)
+    reordered[i], reordered[l] = reordered[l], reordered[i]
+    with pytest.raises(JournalError, match="reordered|corrupted"):
+        IngressPool.replay(reordered)
+    # a lane event against an impossible lane tree (stop of a lane that
+    # was never spawned) is wrapped too, not a bare KeyError
+    with pytest.raises(JournalError, match="reordered|corrupted"):
+        IngressPool.replay(j[:i] + [("stop", 999)] + j[i:])
+
+
+def test_admit_rejects_malformed_program_instruction():
+    pool = IngressPool(capacity=8)
+    with pytest.raises(ValueError, match="instruction"):
+        pool.admit(((RMW, 0, 1),), lane=0)
+
+
+def test_journal_error_is_a_value_error():
+    # callers that predate PR 9 catch ValueError; keep them working
+    assert issubclass(JournalError, ValueError)
