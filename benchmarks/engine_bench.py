@@ -68,6 +68,18 @@ One PR 7 section:
   row; every pipelined stream is asserted bit-identical to the serial
   one (fingerprints + replay logs + full traces).
 
+One PR 10 section:
+
+* destm wave retries (axis="destm_wave"): the serial token walk (one
+  retry EVENT per while_loop trip, the frozen-oracle port) vs
+  wave-speculative retries (all of a trip's conflicting members
+  re-execute at once against the committed-so-far store and the
+  maximal provably-serial token prefix commits), K × contention ×
+  lane count plus a blind write-write best case.  Every pair is
+  asserted bitwise identical on stores and every trace field except
+  the wave observables; rows carry retry_events / retry_waves and
+  their reduction (waves == events only on fully serial chains).
+
 ``--shard-smoke`` (scripts/ci.sh --shard-smoke): asserts sharded ==
 dense store fingerprints and traces across engines at S in {1, 2, 8},
 and — when the host exposes multiple devices
@@ -85,6 +97,12 @@ sessions (D in {1, 2}, engines pcc + occ) under different drain
 budget schedules and asserts bitwise equality — fingerprints, replay
 logs, and every pre-existing ExecTrace field (speculation cost may
 only appear in the new spec_* observables).
+
+``--destm-wave-smoke`` (scripts/ci.sh --destm-wave-smoke): asserts
+wave-speculative DeSTM retries == the serial token walk bitwise
+(stores + all non-wave trace fields) across K × contention × lanes,
+with retry_waves <= retry events everywhere and a strict reduction on
+the blind write-write best case.
 
 ``--smoke`` (scripts/ci.sh --bench-smoke): tiny K, asserts the four
 implementations' store fingerprints and commit positions are bitwise
@@ -106,6 +124,7 @@ Usage:
   python benchmarks/engine_bench.py --incremental-smoke
   python benchmarks/engine_bench.py --compact-smoke
   python benchmarks/engine_bench.py --ingress-smoke
+  python benchmarks/engine_bench.py --destm-wave-smoke
 """
 
 from __future__ import annotations
@@ -299,6 +318,7 @@ def run_bench(ks, contentions, iters: int) -> dict:
     shard_sweep(iters, results)
     ingress_bench(iters, results)
     pipeline_bench(iters, results)
+    destm_wave_bench(iters, results)
     return dict(results=results)
 
 
@@ -623,6 +643,99 @@ def pipeline_bench(iters: int, results: list, ks=(64, 256),
                           f"D={depth}  {secs * 1e3:9.2f} ms  "
                           f"{total / secs:12.1f} txn/s  "
                           f"spec={spec_exec}/inv={spec_inv}")
+
+
+def _assert_wave_equal(tag, out_s, t_s, out_w, t_w):
+    """wave == serial-token-walk, bitwise, on everything but the wave
+    observables (retry_waves / waves_per_round — the whole win)."""
+    import dataclasses
+
+    from repro.core.engine import ExecTrace
+    assert int(fingerprint(out_s)) == int(fingerprint(out_w)), (
+        f"{tag}: wave fingerprint diverged from serial walk")
+    for f in dataclasses.fields(ExecTrace):
+        if f.name in ("retry_waves", "waves_per_round"):
+            continue
+        assert np.array_equal(np.asarray(getattr(t_s, f.name)),
+                              np.asarray(getattr(t_w, f.name))), (
+            f"{tag}: trace field {f.name!r} diverged")
+    events, waves = int(t_s.retry_waves), int(t_w.retry_waves)
+    assert events == int(np.asarray(t_s.retries).sum()), tag
+    assert waves <= events, f"{tag}: waves {waves} > events {events}"
+    return events, waves
+
+
+def _blind_ww_workload(k: int, n_lanes: int, width: int = 2) -> W.Workload:
+    """Blind write-write contention: lane groups of ``width`` write the
+    same object, no reads.  Every round is ``n_lanes/width`` independent
+    WW conflicts — the serial walk pays one retry event per conflict,
+    one wave clears them all (empty read sets are trivially
+    serial-valid), so this is the wave mode's best case."""
+    from repro.core import WRITE, make_batch
+    progs = [[(WRITE, (i % n_lanes) // width, False, i + 1),
+              (WRITE, n_lanes + i % n_lanes, False, i)]
+             for i in range(k)]
+    lanes = np.asarray([i % n_lanes for i in range(k)], np.int32)
+    return W.Workload(name="blind_ww", batch=make_batch(progs),
+                      lanes=lanes, n_lanes=n_lanes,
+                      n_objects=2 * n_lanes + 8)
+
+
+def destm_wave_bench(iters: int, results: list, ks=(64, 256),
+                     lane_counts=(8, 32)) -> None:
+    """PR 10 destm_wave axis: the serial token walk (one retry EVENT per
+    while_loop trip — the frozen-oracle port) vs wave-speculative
+    retries (all of a trip's conflicting members re-execute at once and
+    the maximal provably-serial token prefix commits), K × contention ×
+    lane count.  Every pair is asserted bitwise identical — store
+    fingerprints and every trace field except the wave observables — so
+    the rows measure pure retry-loop mechanics: ``retry_events`` (=
+    serial trips = Σ retries), ``retry_waves`` (wave trips) and their
+    reduction.  The ``blind_ww`` rows are the wave's best case (pure
+    write-write conflicts, whole wave commits in one trip); the skewed
+    counters rows show the realistic middle; fully serial RMW chains
+    show no reduction by design (waves == events there)."""
+    wave_wls = []
+    for k in ks:
+        for cont in ("low", "med"):
+            for n_lanes in lane_counts:
+                wave_wls.append((cont, _workload(k, cont, seed=31,
+                                                 n_lanes=n_lanes)))
+    for k in ks:
+        wave_wls.append(("ww", _blind_ww_workload(k, n_lanes=16)))
+    for cont, wl in wave_wls:
+        k = wl.batch.n_txns
+        store = make_store(wl.n_objects)
+        seq = _seq_for(wl)
+        lanes = jnp.asarray(wl.lanes, jnp.int32)
+        fns = {
+            "serial_walk": lambda: destm_execute(
+                store, wl.batch, seq, lanes, wl.n_lanes, wave=False),
+            "wave": lambda: destm_execute(
+                store, wl.batch, seq, lanes, wl.n_lanes),
+        }
+        outs = {impl: fn() for impl, fn in fns.items()}
+        events, waves = _assert_wave_equal(
+            f"destm_wave {wl.name} K={k} {cont} lanes={wl.n_lanes}",
+            *outs["serial_walk"], *outs["wave"])
+        for impl, fn in fns.items():
+            secs = timeit(fn, warmup=2, iters=iters)
+            _, trace = outs[impl]
+            results.append(dict(
+                engine="destm", k=k, impl=impl, axis="destm_wave",
+                L=wl.batch.max_ins, slot=1, n_lanes=wl.n_lanes,
+                contention=cont, seconds=round(secs, 6),
+                txns_per_sec=round(k / secs, 1),
+                rounds=int(trace.rounds),
+                retries=int(np.asarray(trace.retries).sum()),
+                retry_events=events,
+                retry_waves=int(trace.retry_waves),
+                wave_reduction=events - waves,
+                waves_per_round=[int(x) for x in trace.wave_counts()[:64]]))
+            print(f"destm  K={k:<5d} {cont:4s} lanes={wl.n_lanes:<3d} "
+                  f"{impl:11s} {secs * 1e3:9.2f} ms  "
+                  f"{k / secs:12.1f} txn/s  rounds={int(trace.rounds)} "
+                  f"events={events} waves={waves}")
 
 
 def summarize(results) -> dict:
@@ -973,6 +1086,49 @@ def run_pipeline_smoke() -> None:
           f"(trips {int(tr1.wave_trips)} -> {int(tr8.wave_trips)})")
 
 
+def run_destm_wave_smoke() -> None:
+    """CI gate (scripts/ci.sh --destm-wave-smoke): wave-speculative
+    DeSTM retries == the serial token walk, bitwise — store
+    fingerprints and every trace field except the wave observables —
+    across K × contention × lane count, with retry_waves <= retry
+    events everywhere and a strict reduction on the blind-WW best
+    case."""
+    total_events = total_waves = 0
+    cases = [(k, cont, n_lanes)
+             for k in (16, 48) for cont in ("low", "med")
+             for n_lanes in (1, 8)]
+    for k, cont, n_lanes in cases:
+        wl = _workload(k, cont, seed=41, n_lanes=n_lanes)
+        store = make_store(wl.n_objects)
+        seq = _seq_for(wl)
+        lanes = jnp.asarray(wl.lanes, jnp.int32)
+        out_s = destm_execute(store, wl.batch, seq, lanes, wl.n_lanes,
+                              wave=False)
+        out_w = destm_execute(store, wl.batch, seq, lanes, wl.n_lanes)
+        ev, wv = _assert_wave_equal(
+            f"destm-wave-smoke K={k} {cont} lanes={wl.n_lanes}",
+            *out_s, *out_w)
+        total_events += ev
+        total_waves += wv
+    wl = _blind_ww_workload(48, n_lanes=16)
+    store = make_store(wl.n_objects)
+    seq = _seq_for(wl)
+    lanes = jnp.asarray(wl.lanes, jnp.int32)
+    out_s = destm_execute(store, wl.batch, seq, lanes, wl.n_lanes,
+                          wave=False)
+    out_w = destm_execute(store, wl.batch, seq, lanes, wl.n_lanes)
+    ev, wv = _assert_wave_equal("destm-wave-smoke blind_ww",
+                                *out_s, *out_w)
+    assert wv < ev, (
+        f"destm-wave-smoke blind_ww: expected a strict wave reduction, "
+        f"got events={ev} waves={wv}")
+    total_events += ev
+    total_waves += wv
+    print(f"destm-wave-smoke OK: wave == serial token walk bitwise "
+          f"(stores + traces) across K x contention x lanes; retry "
+          f"events {total_events} -> waves {total_waves}")
+
+
 def run() -> None:
     """benchmarks/run.py entry point: one incremental-vs-rebuild-vs-
     compact row per engine at K=256 low contention, a shards row
@@ -1066,6 +1222,24 @@ def run() -> None:
          f"spec_invalidated="
          f"{sum(int(t.spec_invalidated) for t in traces)};"
          f"bitwise_equal=1")
+    # wave-speculative DeSTM retries: serial token walk vs wave mode on
+    # a contended round structure (bitwise-asserted, the wave-count
+    # reduction is the derived observable)
+    wl4 = _workload(128, "med", seed=31, n_lanes=16)
+    store4 = make_store(wl4.n_objects)
+    seq4 = _seq_for(wl4)
+    lanes4 = jnp.asarray(wl4.lanes, jnp.int32)
+    serial4 = lambda: destm_execute(store4, wl4.batch, seq4, lanes4,
+                                    wl4.n_lanes, wave=False)
+    wave4 = lambda: destm_execute(store4, wl4.batch, seq4, lanes4,
+                                  wl4.n_lanes)
+    ev4, wv4 = _assert_wave_equal("run destm_wave", *serial4(), *wave4())
+    t_serial4 = timeit(serial4, warmup=1, iters=3)
+    t_wave4 = timeit(wave4, warmup=1, iters=3)
+    emit("engine_bench_destm_wave_k128_med", t_wave4 * 1e6,
+         f"serial_over_wave={t_serial4 / t_wave4:.2f}x;"
+         f"retry_events={ev4};retry_waves={wv4};"
+         f"wave_reduction={ev4 - wv4};bitwise_equal=1")
 
 
 def main() -> None:
@@ -1091,6 +1265,11 @@ def main() -> None:
                          "serial on one arrival journal across drain "
                          "budgets — fingerprints, replay logs and full "
                          "traces — plus the blocked OCC wave solve")
+    ap.add_argument("--destm-wave-smoke", action="store_true",
+                    help="assert wave-speculative DeSTM retries == the "
+                         "serial token walk bitwise across K x "
+                         "contention x lanes, retry_waves <= retry "
+                         "events, strict reduction on the WW best case")
     ap.add_argument(
         "--out",
         default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -1115,6 +1294,9 @@ def main() -> None:
         return
     if args.pipeline_smoke:
         run_pipeline_smoke()
+        return
+    if args.destm_wave_smoke:
+        run_destm_wave_smoke()
         return
 
     ks = (64, 256, 1024)

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command tier-1 verification (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [--pipeline-smoke] [--failover-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--bench-smoke] [--incremental-smoke] [--compact-smoke] [--shard-smoke] [--ingress-smoke] [--pipeline-smoke] [--destm-wave-smoke] [--failover-smoke] [extra pytest args]
 #
 # --bench-smoke additionally runs benchmarks/engine_bench.py --smoke after
 # the test suite: it executes every engine through the preserved legacy
@@ -40,6 +40,14 @@
 # solve is decision-identical with fewer while_loop trips (the
 # cross-batch speculation equivalence gate).
 #
+# --destm-wave-smoke runs benchmarks/engine_bench.py --destm-wave-smoke:
+# the PR10 wave-speculative DeSTM retry walk == the serial token walk
+# bitwise — store fingerprints and every trace field except the wave
+# observables (retry_waves / waves_per_round) — across K x contention x
+# lane count, with retry_waves <= retry events everywhere and a strict
+# wave-count reduction on the blind write-write best case (the
+# wave-retry equivalence gate).
+#
 # --failover-smoke runs the FULL PR9 fault-injection matrix
 # (REPRO_FAILOVER_FULL=1 tests/test_failover.py): replicas killed at
 # deterministic (batch, phase) fault points — including real subprocess
@@ -64,6 +72,7 @@ COMPACT_SMOKE=0
 SHARD_SMOKE=0
 INGRESS_SMOKE=0
 PIPELINE_SMOKE=0
+DESTM_WAVE_SMOKE=0
 FAILOVER_SMOKE=0
 PYTEST_ARGS=()
 for arg in "$@"; do
@@ -74,6 +83,7 @@ for arg in "$@"; do
     --shard-smoke) SHARD_SMOKE=1 ;;
     --ingress-smoke) INGRESS_SMOKE=1 ;;
     --pipeline-smoke) PIPELINE_SMOKE=1 ;;
+    --destm-wave-smoke) DESTM_WAVE_SMOKE=1 ;;
     --failover-smoke) FAILOVER_SMOKE=1 ;;
     *) PYTEST_ARGS+=("$arg") ;;
   esac
@@ -120,6 +130,10 @@ fi
 
 if [[ "$PIPELINE_SMOKE" == "1" ]]; then
   run_stage pipeline-smoke python benchmarks/engine_bench.py --pipeline-smoke
+fi
+
+if [[ "$DESTM_WAVE_SMOKE" == "1" ]]; then
+  run_stage destm-wave-smoke python benchmarks/engine_bench.py --destm-wave-smoke
 fi
 
 if [[ "$FAILOVER_SMOKE" == "1" ]]; then

@@ -12,24 +12,49 @@ requires deterministic conflicts).
 Vectorized round (shared commit pipeline, :mod:`repro.core.protocol`):
 round membership is a per-lane scatter-min (first pending position per
 lane) instead of a K-step pick scan; the round's ≤ n_lanes members are
-then *compacted* into an (n_lanes, L) block sorted by token order, and
-the token-order commit walk becomes a loop over *retry events* only:
-batched conflict checks find the first compact row that conflicts
-(against the accumulated actual writes plus the speculative writes of
-the clean block before it), the whole clean block lands in one fused
-scatter, and only the conflicting transaction re-executes serially
-while holding the token.  A round costs O(#retries) device steps on
-O(n_lanes·L)-sized operands instead of a K-step scan over O(n_objects)
-probes; a conflict-free round is entirely batched.  Since PR 3 the round's
-read phase is the *masked* executor (``txn.run_live`` threaded through
-``protocol.RoundState``): only the ≤ n_lanes members execute (every other
-transaction's cached row is carried and never consumed until its own
-round), and each retry event re-executes its lane through the same masked
-path instead of a scalar ``run_txn`` chain.  Decisions are
-bit-identical to the old scan (``repro.core.legacy_scan``): a clean
-commit's actual write set IS its speculative one, so the batched
-verdicts match the serial walk's exactly up to each retry, and the
-retry re-derives its write set serially just as before.
+then *compacted* into an (n_lanes, L) block sorted by token order.  The
+token-order commit walk inside a round runs in one of two modes, both
+decision- and fingerprint-identical (asserted bitwise in
+tests/test_destm_wave.py):
+
+* **serial token walk** (``wave=False`` — the frozen-oracle port): one
+  retry *event* per ``while_loop`` trip.  Batched conflict checks find
+  the first compact row that conflicts (against the accumulated actual
+  writes plus the speculative writes of the clean block before it), the
+  whole clean block lands in one fused scatter, and only that one
+  conflicting transaction re-executes serially while holding the token.
+  A round costs O(#retry events) device steps.
+* **wave-speculative retries** (``wave=True``, the default — PR 10's
+  Block-STM move for this preordered setting): each trip re-executes
+  *every* currently-conflicting member at once against the
+  committed-so-far store (the clean prefix included, other wave
+  members' writes NOT), then commits the maximal token-order prefix
+  whose rows it can prove serial-identical — ``retry_waves`` trips per
+  round instead of one per event, with equality only on fully serial
+  conflict chains.  An invalid speculative row is simply discarded and
+  re-executed next wave.  The wave-validity invariant: a committed
+  prefix row must (i) resolve exactly as the trip-start classification
+  said (its speculative footprint's verdict is unchanged when earlier
+  wave members' *speculative* writes are swapped for their *actual*
+  re-executed writes — ``protocol.cross_writer_conflicts`` on the
+  rectangular strip kernels), and (ii) if re-executed, have logged no
+  read of an address any earlier prefix row commits this trip (row
+  purity then makes the wave execution bit-equal to the serial retry).
+  Both checks are conservative only toward *shrinking* the prefix — a
+  dropped row re-executes next wave with the serial semantics — so the
+  committed history never diverges from the token walk's.
+
+Since PR 3 the round's read phase is the *masked* executor
+(``txn.run_live`` threaded through ``protocol.RoundState``): only the
+≤ n_lanes members execute, and retries re-execute through the same
+masked path on the compact block.  Since PR 10 the round-0 read phase
+is also *seedable* (``seed=`` / ``EngineDef.raw_spec``), exactly like
+pcc/occ: a :class:`protocol.SpecSeed` captured against an earlier store
+snapshot is re-based by ``protocol.seed_round_state`` and round 0
+charges its ordinary accounting via ``protocol.charge_round_state``
+without re-walking the members — the entry point behind
+``PotSession(pipeline_depth=D)`` cross-batch pipelining, bit-identical
+to the unseeded call except the ``spec_*`` observables.
 
 Consequences the paper exploits and we measure:
 - a lane with n transactions needs >= n rounds even when nothing
@@ -42,6 +67,8 @@ differs, which is exactly the paper's Fig. 7/9/10 story.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +89,10 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                    lanes: jax.Array, n_lanes: int,
                    max_rounds: int | None = None,
                    incremental: bool = True,
-                   compact: bool = True) -> tuple[TStore, ExecTrace]:
+                   compact: bool = True,
+                   wave: bool = True,
+                   seed: "protocol.SpecSeed | None" = None
+                   ) -> tuple[TStore, ExecTrace]:
     """seq: (K,) 1-based sequence numbers; lanes: (K,) lane of each txn.
 
     Token order within a round = sequence order restricted to the round's
@@ -84,6 +114,18 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     bit-identical either way.  Rows with ``n_ins == 0`` are *vacant*
     (bucket padding): never round members, never committed, no ``gv``
     advance (their sequence numbers must sort after every real row's).
+
+    ``wave``: wave-speculative retries (module docstring) — all of a
+    trip's conflicting members re-execute at once and the maximal
+    provably-serial token prefix commits, instead of one retry event
+    per trip.  Bit-identical store/trace either way; only the
+    ``retry_waves`` / ``waves_per_round`` observables record the mode's
+    win (serial: waves == retry events).
+
+    ``seed``: an optional :class:`protocol.SpecSeed` — round 0's read
+    phase already ran speculatively against an earlier snapshot and was
+    re-based onto this store; round 0 then only charges accounting
+    (bit-identical result, ``spec_*`` observables record the overlap).
     """
     k = batch.n_txns
     layout = store.layout     # static: dense or S contiguous range shards
@@ -94,6 +136,7 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
     lane_slot = jnp.arange(n_lanes)
     real = batch.n_ins > 0     # vacant rows (bucket padding) never commit
     n_real = real.sum(dtype=jnp.int32)
+    seeded = seed is not None  # static per trace (None jits leaf-free)
 
     def round_body(state):
         rs, done, rnd, tr = state
@@ -116,15 +159,43 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         # compact path executes exactly the (n_lanes, L) member block in
         # token order through the shared gathered read phase; the result
         # rows come back compact, no post-hoc (K, L) gathers needed.
+        # Seeded round 0 consumes the re-based rows instead (their
+        # members execute against the batch-start store, which is what
+        # seed_round_state made the cache bit-identical to) and charges
+        # the identical accounting.
         if incremental and compact:
             live_t = sel_t
-            rs, cres = protocol.refresh_round_state_gathered(
-                rs, batch, sel_txn, live, layout)
+
+            def fresh(r):
+                return protocol.refresh_round_state_gathered(
+                    r, batch, sel_txn, live, layout)
+
+            if seeded:
+                def charge(r):
+                    r = protocol.charge_round_state(r, batch, sel_t,
+                                                    n_lanes)
+                    return r, jax.tree.map(lambda a: a[sel_txn], r.res)
+
+                rs, cres = jax.lax.cond(rnd == 0, charge, fresh, rs)
+            else:
+                rs, cres = fresh(rs)
             ra_c, rn_c = cres.raddrs, cres.rn
             wa_c, wv_c, wn_c = cres.waddrs, cres.wvals, cres.wn
         else:
             live_t = sel_t if incremental else jnp.ones((k,), bool)
-            rs = protocol.refresh_round_state(rs, batch, live_t, layout)
+
+            def fresh(r):
+                return protocol.refresh_round_state(r, batch, live_t,
+                                                    layout)
+
+            if seeded:
+                rs = jax.lax.cond(
+                    rnd == 0,
+                    lambda r: protocol.charge_round_state(r, batch,
+                                                          live_t, k),
+                    fresh, rs)
+            else:
+                rs = fresh(rs)
             res = rs.res
             ra_c, rn_c = res.raddrs[sel_txn], res.rn[sel_txn]
             wa_c, wv_c, wn_c = (res.waddrs[sel_txn], res.wvals[sel_txn],
@@ -134,37 +205,44 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         compact_batch = jax.tree.map(lambda a: a[sel_txn], batch)
         compact_res = TxnResult(raddrs=ra_c, rn=rn_c, waddrs=wa_c,
                                 wvals=wv_c, wn=wn_c)
+        slot = jnp.arange(wa_c.shape[1])
 
-        # ---- token-order commits, one iteration per RETRY EVENT: commit
-        # the conflict-free block in one fused scatter, batch-re-execute
-        # the conflicting lane through the masked executor (token held),
-        # repeat on the rest.  All operands are compact (n_lanes, L) — no
-        # O(K) work per event.
+        # ---- token-order commits.  Both modes share the trip prologue:
+        # batched conflict checks (vs the accumulated actual writes of
+        # earlier trips, and vs the speculative writes of remaining
+        # members ahead — they commit clean, so speculative = actual for
+        # them) find the first conflicting compact row f; the clean
+        # block before it lands in one fused scatter.  They differ in
+        # what one trip retires beyond that clean prefix: the serial
+        # walk re-executes exactly lane f (one retry EVENT per trip),
+        # the wave walk re-executes EVERY conflicting member at once and
+        # commits the maximal provably-serial prefix.  All operands are
+        # compact (n_lanes, L) — no O(K) work per trip.
         def token_cond(st):
             return st[3].any()  # members remaining
 
-        def token_body(st):
-            values, versions, written, remaining, retried = st
-            # conflict vs committed-so-far actual writes (earlier token
-            # iterations) ...
+        def trip_prologue(st):
+            values, versions, written, remaining, retried, waves = st
             accum_hit = jax.vmap(
                 protocol.footprint_conflicts, in_axes=(None, 0, 0, 0, 0))(
                     written, ra_c, rn_c, wa_c, wn_c)
-            # ... or vs the speculative writes of remaining members ahead
-            # of us (they commit clean, so speculative = actual for them)
             spec_hit = protocol.earlier_writer_conflicts(
                 compact_res, None, remaining, lane_slot, n_obj)
             bad = remaining & (accum_hit | spec_hit)
-            f = jnp.min(jnp.where(bad, lane_slot, n_lanes))  # retry event
+            f = jnp.min(jnp.where(bad, lane_slot, n_lanes))
             clean = remaining & (lane_slot < f)
             values, versions = protocol.fused_write_back(
                 values, versions, wa_c, wv_c, wn_c, clean, lane_slot, sn_c,
                 layout)
-            slot = jnp.arange(wa_c.shape[1])
             clean_slots = clean[:, None] & (slot[None, :] < wn_c[:, None])
             written = written.at[
                 jnp.where(clean_slots, wa_c, n_obj).reshape(-1)].set(
                     True, mode="drop")
+            return values, versions, written, accum_hit, bad, f, clean
+
+        def token_body_serial(st):
+            values, versions, written, remaining, retried, waves = st
+            values, versions, written, _, bad, f, clean = trip_prologue(st)
 
             def do_retry(args):
                 # token held: re-execute against committed state through
@@ -193,12 +271,77 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                 (values, versions, written))
             retried = retried | (lane_slot == f)    # empty when f == n_lanes
             remaining = remaining & (lane_slot > f)
-            return values, versions, written, remaining, retried
+            waves = waves + (f < n_lanes).astype(jnp.int32)
+            return values, versions, written, remaining, retried, waves
 
-        values, versions, _, _, retried_c = jax.lax.while_loop(
-            token_cond, token_body,
+        def token_body_wave(st):
+            values, versions, written, remaining, retried, waves = st
+            (values, versions, written,
+             accum_hit, bad, f, clean) = trip_prologue(st)
+
+            def do_wave(args):
+                values, versions, written, retried = args
+                # (a)+(b) the wave: every conflicting member re-executes
+                # in one batched pass against the committed-so-far store
+                # (clean prefix included, other wave members' writes
+                # NOT); the merge keeps the clean rows' speculative
+                # results, so ``wres`` holds the block's RESOLVED
+                # candidate result per row.
+                wres = run_live(compact_batch,
+                                flat_values(values, layout), bad,
+                                compact_res, n_obj)
+                # (c) validation, rank space, rectangular strips.
+                # Classification agreement: a row's serial-turn verdict
+                # equals its trip-start one unless swapping an earlier
+                # wave member's speculative writes for its re-executed
+                # ones flips it — a conflicting member must stay hit
+                # (else the serial walk would commit its SPECULATIVE
+                # row, which this trip did not re-derive), a clean
+                # member must stay clean.
+                hit_wave_w = protocol.cross_writer_conflicts(
+                    compact_res, wres, bad, lane_slot, n_obj)
+                hit_clean_spec = protocol.earlier_writer_conflicts(
+                    compact_res, None, remaining & ~bad, lane_slot, n_obj)
+                class_ok = jnp.where(
+                    bad, accum_hit | hit_clean_spec | hit_wave_w,
+                    ~hit_wave_w)
+                # Execution validity: a wave row's logged READS must
+                # miss every write committed between its snapshot (the
+                # clean-prefix store) and its token turn — the resolved
+                # writes of later-block rows before it (row purity then
+                # makes the wave execution == the serial retry).
+                later = remaining & (lane_slot >= f)
+                exec_hit = protocol.cross_writer_conflicts(
+                    wres, wres, later, lane_slot, n_obj, reads_only=True)
+                # (d) maximal token-order prefix of valid rows — the
+                # prefix_commit cumulative-AND over token positions.
+                ok = jnp.where(later,
+                               class_ok & (~bad | ~exec_hit), True)
+                alive = jax.lax.associative_scan(jnp.logical_and, ok)
+                commit2 = later & alive
+                values, versions = protocol.fused_write_back(
+                    values, versions, wres.waddrs, wres.wvals, wres.wn,
+                    commit2, lane_slot, sn_c, layout)
+                cmt_slots = commit2[:, None] & (
+                    slot[None, :] < wres.wn[:, None])
+                written = written.at[
+                    jnp.where(cmt_slots, wres.waddrs,
+                              n_obj).reshape(-1)].set(True, mode="drop")
+                retried = retried | (bad & commit2)
+                return values, versions, written, retried, commit2
+
+            values, versions, written, retried, commit2 = jax.lax.cond(
+                f < n_lanes, do_wave,
+                lambda a: (*a, jnp.zeros((n_lanes,), bool)),
+                (values, versions, written, retried))
+            remaining = remaining & (lane_slot >= f) & ~commit2
+            waves = waves + (f < n_lanes).astype(jnp.int32)
+            return values, versions, written, remaining, retried, waves
+
+        values, versions, _, _, retried_c, waves_r = jax.lax.while_loop(
+            token_cond, token_body_wave if wave else token_body_serial,
             (values, versions, jnp.zeros((n_obj,), bool), live,
-             jnp.zeros((n_lanes,), bool)))
+             jnp.zeros((n_lanes,), bool), jnp.zeros((), jnp.int32)))
 
         # ---- trace bookkeeping: retry events scattered back to txn ids
         # (live members have distinct txns, so add == set)
@@ -222,7 +365,10 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         tr = dict(tr, retries=retries, exec_ops=exec_ops,
                   barrier_ops=barrier_ops, commit_round=commit_round,
                   live_per_round=tr["live_per_round"].at[rnd].set(
-                      live_t.sum(dtype=jnp.int32)))
+                      live_t.sum(dtype=jnp.int32)),
+                  retry_waves=tr["retry_waves"] + waves_r,
+                  waves_per_round=tr["waves_per_round"].at[rnd].set(
+                      waves_r))
         rs = protocol.commit_round_state(rs, values, versions)
         return rs, done, rnd + 1, tr
 
@@ -235,9 +381,22 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
                retries=jnp.zeros((k,), jnp.int32),
                exec_ops=jnp.zeros((), jnp.int32),
                barrier_ops=jnp.zeros((), jnp.int32),
-               live_per_round=jnp.full((limit,), -1, jnp.int32))
-    rs0 = protocol.init_round_state(batch, store.values, store.versions,
-                                    track_conflict=False, layout=layout)
+               live_per_round=jnp.full((limit,), -1, jnp.int32),
+               retry_waves=jnp.zeros((), jnp.int32),
+               waves_per_round=jnp.full((limit,), -1, jnp.int32))
+    if seeded:
+        rs0, spec_inv, spec_rnds = protocol.seed_round_state(
+            batch, store, seed, compact=(incremental and compact))
+        # DeSTM carries no conflict structure: its conflict questions
+        # live on the compact block.  Strip the seed's table so the
+        # carried pytree matches the unseeded loop's.
+        rs0 = dataclasses.replace(rs0, conflict=None, foot_bits=None,
+                                  write_bits=None)
+    else:
+        rs0 = protocol.init_round_state(batch, store.values,
+                                        store.versions,
+                                        track_conflict=False,
+                                        layout=layout)
     rs, done, rnd, tr = jax.lax.while_loop(
         cond, round_body,
         (rs0, ~real, jnp.zeros((), jnp.int32), tr0))
@@ -263,20 +422,30 @@ def _destm_execute(store: TStore, batch: TxnBatch, seq: jax.Array,
         live_txns=rs.live_txns, live_slots=rs.live_slots,
         walked_slots=rs.walked_slots,
         live_per_round=tr["live_per_round"],
+        retry_waves=tr["retry_waves"],
+        waves_per_round=tr["waves_per_round"],
         # a txn executes only in its commit round
-        first_round=tr["commit_round"], commit_pos=commit_pos)
+        first_round=tr["commit_round"], commit_pos=commit_pos,
+        **(dict(spec_executed=n_real, spec_invalidated=spec_inv,
+                spec_rounds=spec_rnds) if seeded else {}))
     return store_with(store, values, versions, store.gv + n_real), trace
 
 
 destm_execute = jax.jit(
     _destm_execute,
-    static_argnames=("n_lanes", "max_rounds", "incremental", "compact"))
+    static_argnames=("n_lanes", "max_rounds", "incremental", "compact",
+                     "wave"))
 
 
 def _destm_raw(store, batch, seq, lanes, n_lanes):
     return _destm_execute(store, batch, seq, lanes, n_lanes)
 
 
+def _destm_raw_spec(store, batch, seq, lanes, n_lanes, seed):
+    return _destm_execute(store, batch, seq, lanes, n_lanes, seed=seed)
+
+
 register_engine(EngineDef(
     "destm", _destm_raw,
-    doc="DeSTM analog — one txn per lane per round, barrier-separated"))
+    doc="DeSTM analog — one txn per lane per round, barrier-separated",
+    raw_spec=_destm_raw_spec))

@@ -79,6 +79,16 @@ class ExecTrace:
     live_per_round: jax.Array  # (R,) int32 — live count per round, -1 pad
     #   (R = the engine's static round limit; entries past `rounds` stay
     #    -1.  Engines predating the RoundState loop leave it empty.)
+    # -- DeSTM retry-wave observables (PR 10).  The wave-speculative
+    #    retry walk is bitwise-identical to the serial token walk in
+    #    every OTHER field; the whole win shows up here: retry_waves ≤
+    #    retry events (= Σ retries for DeSTM), with equality exactly on
+    #    fully serial conflict chains.  The serial walk records its
+    #    event count, so the two modes are directly comparable.
+    retry_waves: jax.Array     # () int32 — Σ token-walk trips that
+    #   re-executed ≥ 1 round member (serial walk: = retry events)
+    waves_per_round: jax.Array  # (R,) int32 — retry waves per round, -1
+    #   pad (same static limit as live_per_round; empty when untracked)
     # -- cross-batch speculation observables (PR 7).  Zero on the serial
     #    path; every OTHER field is bit-identical between a pipelined and
     #    a serial run of the same stream (the pipelining invariant) — the
@@ -107,6 +117,14 @@ class ExecTrace:
         lpr = np.asarray(self.live_per_round)
         return lpr[:int(self.rounds)] if lpr.size else lpr
 
+    def wave_counts(self):
+        """Per-round retry-wave counts (DeSTM), trimmed to the rounds
+        actually run.  Host-syncs; empty for engines that did not record
+        them."""
+        import numpy as np
+        wpr = np.asarray(self.waves_per_round)
+        return wpr[:int(self.rounds)] if wpr.size else wpr
+
 
 def make_trace(k: int, **overrides) -> ExecTrace:
     """An ExecTrace with every field defaulted; engines override what
@@ -128,6 +146,8 @@ def make_trace(k: int, **overrides) -> ExecTrace:
         live_slots=jnp.zeros((), jnp.int32),
         walked_slots=jnp.zeros((), jnp.int32),
         live_per_round=jnp.zeros((0,), jnp.int32),
+        retry_waves=jnp.zeros((), jnp.int32),
+        waves_per_round=jnp.zeros((0,), jnp.int32),
         spec_executed=jnp.zeros((), jnp.int32),
         spec_invalidated=jnp.zeros((), jnp.int32),
         spec_rounds=jnp.zeros((), jnp.int32),
@@ -183,8 +203,10 @@ class EngineDef:
     engine validates it against the current store, re-executes only
     the invalidated rows, and must produce a store and trace
     bit-identical to ``raw`` on the same inputs (only the ``spec_*``
-    trace fields differ from zero).  ``None`` when the engine has no
-    seeded path — ``PotSession`` then falls back to the serial step.
+    trace fields differ from zero).  All four registry engines ship
+    one (pcc/occ since PR 7, destm/pogl since PR 10); ``None`` is
+    still allowed for out-of-registry engines — ``PotSession`` then
+    falls back to the (bit-identical) serial step.
     """
 
     name: str

@@ -68,6 +68,13 @@ class EngineReport:
     restored_from: int = -1    # snapshot id the session restored from
     #                            (-1: never restored)
     recovery_batches: int = 0  # batches executed since the restore
+    # -- DeSTM retry-wave observables (PR 10) --------------------------
+    retry_waves: int = 0     # Σ token-walk trips that re-executed ≥ 1
+    #                          member (wave mode: ≤ retries; serial
+    #                          walk: == retry events)
+    spec_engine: int = 0     # 1 when the engine behind the trace has a
+    #                          seeded entry point (raw_spec) — i.e. it
+    #                          can serve a pipelined session
 
     def row(self) -> str:
         return (f"{self.name},{self.rounds},{self.work_ops:.0f},"
@@ -79,7 +86,8 @@ class EngineReport:
                 f"{self.drained},{self.backpressure},{self.spec_executed},"
                 f"{self.spec_invalidated},{self.spec_rounds},"
                 f"{self.pipeline_depth},{self.snapshots_taken},"
-                f"{self.restored_from},{self.recovery_batches}")
+                f"{self.restored_from},{self.recovery_batches},"
+                f"{self.retry_waves},{self.spec_engine}")
 
 
 HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
@@ -87,7 +95,7 @@ HEADER = ("engine,rounds,work_ops,critical_path,wait_rounds,retries,"
           "walked_slots,compile_count,queue_depth,admitted,evicted,"
           "drained,backpressure,spec_executed,spec_invalidated,"
           "spec_rounds,pipeline_depth,snapshots_taken,restored_from,"
-          "recovery_batches")
+          "recovery_batches,retry_waves,spec_engine")
 
 
 def _txn_cost(n_ins, rn, wn, fast: bool) -> np.ndarray:
@@ -135,7 +143,12 @@ def report_from_trace(name: str, trace, batch, res_rn, res_wn,
         rep.spec_executed = int(trace.spec_executed)
         rep.spec_invalidated = int(trace.spec_invalidated)
         rep.spec_rounds = int(trace.spec_rounds)
+        # PR 10 retry-wave observable (zero for engines without a
+        # token-walk retry loop)
+        rep.retry_waves = int(trace.retry_waves)
     if session is not None:
+        eng = getattr(session, "engine", None)
+        rep.spec_engine = int(getattr(eng, "raw_spec", None) is not None)
         rep.compile_count = session.compile_count()
         rep.pipeline_depth = int(getattr(session, "pipeline_depth", 0))
         # PR 9 failover observables (defaulted for session-like stubs)

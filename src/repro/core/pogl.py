@@ -5,6 +5,19 @@ serially in the sequence order, no speculation.  Deterministic by
 construction; zero parallelism.  Doubles as the **serial oracle** for
 property tests — every other deterministic engine must produce a store
 image bitwise-equal to PoGL's.
+
+Since PR 10 the engine is also *seedable* (``seed=`` /
+``EngineDef.raw_spec``), so ``PotSession(pipeline_depth=D)`` cross-batch
+pipelining covers all four engines: a :class:`protocol.SpecSeed`
+captured against an earlier snapshot is re-based onto the current store
+by ``protocol.seed_round_state``; the serial walk then *reuses* a
+cached row whenever its logged read set misses every address written
+earlier in this batch (row purity makes the cached result bit-equal to
+a fresh run), re-executing only the rows the within-batch order
+actually invalidates.  The store, trace, and commit positions are
+bit-identical to the unseeded walk — only the ``spec_*`` observables
+record the overlap (within-batch re-runs count toward
+``spec_invalidated`` alongside the cross-batch ones).
 """
 
 from __future__ import annotations
@@ -40,12 +53,56 @@ def _pogl_ordered(store: TStore, batch: TxnBatch, order: jax.Array) -> TStore:
     return store_with(store, values, versions, store.gv + k)
 
 
+def _pogl_seeded(store: TStore, batch: TxnBatch, order: jax.Array,
+                 res) -> tuple[TStore, jax.Array]:
+    """The serial walk over re-based speculative rows ``res`` (bit-equal
+    to executing each row against the batch-start store).  A cached row
+    replays bit-identically unless an EARLIER row of this batch wrote an
+    address it read (read-set check only — sound by row purity, same
+    argument as :func:`protocol.speculation_invalid`; conservative only
+    on read-your-writes rows).  Returns the store plus the number of
+    rows the within-batch order forced to re-execute."""
+    k = batch.n_txns
+    gv0 = store.gv
+    layout = store.layout
+    n_obj = layout.n_objects
+    slot = jnp.arange(batch.opcodes.shape[1])
+
+    def step(carry, p):
+        values, versions, written, n_rerun = carry
+        t = order[p]
+        row = jax.tree.map(lambda a: a[t], batch)
+        ra, rn = res.raddrs[t], res.rn[t]
+        stale = (written[ra] & (slot < rn)).any()
+
+        def rerun(_):
+            _, _, waddrs, wvals, wn = run_txn(
+                row, flat_values(values, layout), n_obj)
+            return waddrs, wvals, wn
+
+        def cached(_):
+            return res.waddrs[t], res.wvals[t], res.wn[t]
+
+        waddrs, wvals, wn = jax.lax.cond(stale, rerun, cached, None)
+        values, versions = protocol.apply_writes(
+            values, versions, waddrs, wvals, wn, gv0 + p + 1, layout)
+        written = protocol.mark_writes(written, waddrs, wn)
+        return (values, versions, written,
+                n_rerun + stale.astype(jnp.int32)), None
+
+    (values, versions, _, n_rerun), _ = jax.lax.scan(
+        step, (store.values, store.versions, jnp.zeros((n_obj,), bool),
+               jnp.zeros((), jnp.int32)),
+        jnp.arange(k))
+    return store_with(store, values, versions, store.gv + k), n_rerun
+
+
 @jax.jit
 def pogl_execute(store: TStore, batch: TxnBatch, seq: jax.Array) -> TStore:
     return _pogl_ordered(store, batch, jnp.argsort(seq))
 
 
-def _pogl_raw(store, batch, seq, lanes, n_lanes):
+def _pogl_raw(store, batch, seq, lanes, n_lanes, seed=None):
     del lanes, n_lanes
     k = batch.n_txns
     # argsort once; the rank is its inverse permutation (one scatter)
@@ -55,6 +112,17 @@ def _pogl_raw(store, batch, seq, lanes, n_lanes):
     # row) execute as no-ops but never commit: no gv advance, no position
     real = batch.n_ins > 0
     n_real = real.sum(dtype=jnp.int32)
+    seeded = seed is not None  # static per trace (None jits leaf-free)
+    if seeded:
+        rs, spec_inv, spec_rnds = protocol.seed_round_state(batch, store,
+                                                            seed)
+        out, n_rerun = _pogl_seeded(store, batch, order, rs.res)
+        spec = dict(spec_executed=n_real,
+                    spec_invalidated=spec_inv + n_rerun,
+                    spec_rounds=spec_rnds)
+    else:
+        out = _pogl_ordered(store, batch, order)
+        spec = {}
     # one txn per serial "round", uninstrumented (global lock = fast path)
     trace = make_trace(
         k, commit_round=jnp.where(real, rank, -1),
@@ -62,12 +130,17 @@ def _pogl_raw(store, batch, seq, lanes, n_lanes):
         first_round=jnp.where(real, rank, -1),
         mode=jnp.where(real, MODE_FAST, 0).astype(jnp.int32),
         rounds=n_real,
-        exec_ops=batch.n_ins.sum(dtype=jnp.int32))
-    out = _pogl_ordered(store, batch, order)
+        exec_ops=batch.n_ins.sum(dtype=jnp.int32),
+        **spec)
     out = store_with(out, out.values, out.versions, store.gv + n_real)
     return out, trace
 
 
+def _pogl_raw_spec(store, batch, seq, lanes, n_lanes, seed):
+    return _pogl_raw(store, batch, seq, lanes, n_lanes, seed=seed)
+
+
 register_engine(EngineDef(
     "pogl", _pogl_raw,
-    doc="Preordered Global Lock — strictly serial in sequence order"))
+    doc="Preordered Global Lock — strictly serial in sequence order",
+    raw_spec=_pogl_raw_spec))

@@ -702,6 +702,29 @@ def earlier_writer_conflicts(res, conflict, writer_mask: jax.Array,
     return r_hit.any(axis=1) | w_hit.any(axis=1)
 
 
+def cross_writer_conflicts(reader_res, writer_res, writer_mask: jax.Array,
+                           rank: jax.Array, n_objects: int,
+                           reads_only: bool = False) -> jax.Array:
+    """bad (C,) bool: does reader row t's footprint (or, with
+    ``reads_only``, its logged read set alone) hit the write set of a
+    writer row q with ``writer_mask[q]`` and ``rank[q] < rank[t]``?
+
+    The two-block generalization of :func:`earlier_writer_conflicts`
+    for DeSTM's wave-speculative retries (PR 10), where the question
+    crosses result blocks: a row's *speculative* footprint against a
+    wave's *re-executed* write sets (classification agreement), and a
+    wave row's re-executed read set against the block's resolved write
+    sets (execution validity).  Verdicts come from the rectangular
+    strip kernel (:func:`repro.kernels.ops.cross_conflicts`) masked to
+    earlier-rank marked writers — rank space, like every commit
+    decision."""
+    mat = kernel_ops.cross_conflicts(
+        reader_res.raddrs, reader_res.rn, reader_res.waddrs, reader_res.wn,
+        writer_res.waddrs, writer_res.wn, n_objects, reads_only=reads_only)
+    earlier = writer_mask[None, :] & (rank[None, :] < rank[:, None])
+    return (mat & earlier).any(axis=1)
+
+
 def prefix_commit(res, conflict, order: jax.Array, rank: jax.Array,
                   n_comm: jax.Array, n_objects: int,
                   real: jax.Array | None = None) -> jax.Array:

@@ -70,8 +70,10 @@ pipelined stream's stores, fingerprints, traces and ``replay_log()``
 are bit-identical to the serial ``D=0`` run by construction (asserted
 in tests/test_pipeline.py and ``scripts/ci.sh --pipeline-smoke``); the
 speculation cost is surfaced only in the new ``ExecTrace.spec_*``
-observables.  ``D=0`` (default) is exactly the pre-PR path; engines
-without a seeded entry point (``raw_spec is None``) fall back to it.
+observables.  ``D=0`` (default) is exactly the pre-PR path.  Since
+PR 10 every registry engine has a seeded entry point (``raw_spec``),
+so pipelining covers all four; an out-of-registry engine registered
+without one still silently serves the (bit-identical) serial path.
 
 **Crash-consistent checkpoints** (PR 9): ``snapshot(dir, pool=...)`` /
 ``PotSession.restore(dir, arrival_journal=...)`` round-trip the complete
@@ -188,7 +190,8 @@ class PotSession:
         store in ``run_stream`` / ``serve`` (cross-batch pipelining —
         see the module docstring).  Bit-identical to the serial stream
         for any D; 0 (default) is exactly the pre-PR serial path, as is
-        any engine without a seeded entry point (``raw_spec is None``).
+        any out-of-registry engine without a seeded entry point
+        (``raw_spec is None`` — all four registry engines have one).
     """
 
     def __init__(self, n_objects: int | None = None, *, slot: int = 1,
@@ -596,6 +599,20 @@ class PotSession:
         the recorded traces — keep off the streaming hot path.
         """
         return [t.live_counts() for t in self.traces]
+
+    def wave_counts(self) -> list[np.ndarray]:
+        """Per-round retry-wave counts, one array per submitted batch,
+        trimmed to the rounds each batch actually ran.
+
+        The observable behind DeSTM's wave-speculative retries (PR 10):
+        every wave trip re-executes ALL of a round's conflicting members
+        and commits the maximal provably-serial token prefix, so the
+        per-round wave counts sit at or below the serial walk's retry
+        events (equality only on fully serial conflict chains).  Engines
+        that do not record waves return empty arrays.  Host-syncs the
+        recorded traces — keep off the streaming hot path.
+        """
+        return [t.wave_counts() for t in self.traces]
 
     def replay_sequencer(self) -> ReplaySequencer:
         """A sequencer that replays this session's commit order — feed it

@@ -496,6 +496,38 @@ def spec_read_invalid_sharded(raddrs: jax.Array, rn: jax.Array,
     return out
 
 
+def cross_conflicts(reader_raddrs: jax.Array, reader_rn: jax.Array,
+                    reader_waddrs: jax.Array, reader_wn: jax.Array,
+                    writer_waddrs: jax.Array, writer_wn: jax.Array,
+                    n_objects: int, reads_only: bool = False) -> jax.Array:
+    """Rectangular reader × writer conflict strip: (R, C) bool where
+    entry (i, j) means reader row i's footprint (reads ∪ writes, or the
+    logged read set alone with ``reads_only`` — sound for execution
+    validity by row purity, same argument as :func:`spec_read_invalid`)
+    intersects writer row j's write set.
+
+    The cross-result twin of :func:`conflict_matrix` behind DeSTM's
+    wave-speculative retry validation (PR 10): the reader and writer
+    verdicts come from DIFFERENT result blocks (speculative footprints
+    vs a wave's re-executed write sets), so neither the carried table
+    nor the delta strips apply.  On TPU both sides bit-pack and the
+    strip is one ``conflict.conflict_matrix_bits_pair`` launch; off-TPU
+    a dense bit-ops fallback with identical verdicts."""
+    r = reader_raddrs.shape[0]
+    c = writer_waddrs.shape[0]
+    rbits = _val.pack_addr_sets(reader_raddrs, reader_rn, n_objects)
+    if not reads_only:
+        rbits = rbits | _val.pack_addr_sets(reader_waddrs, reader_wn,
+                                            n_objects)
+    wbits = _val.pack_addr_sets(writer_waddrs, writer_wn, n_objects)
+    if _on_tpu():
+        rb = _pad_to(_pad_to(rbits, _conf.BI, 0), _conf.BW, 1)
+        wb = _pad_to(_pad_to(wbits, _conf.BJ, 0), _conf.BW, 1)
+        return _conf.conflict_matrix_bits_pair(
+            rb, wb, interpret=False)[:r, :c]
+    return ((rbits[:, None, :] & wbits[None, :, :]) != 0).any(axis=2)
+
+
 def adamw_update(p, m, v, g, *, step, lr=1e-3, b1=0.9, b2=0.999,
                  eps=1e-8, wd=0.01):
     """Fast-mode fused AdamW over an arbitrary-shaped parameter leaf."""

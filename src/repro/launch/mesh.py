@@ -8,16 +8,23 @@ from __future__ import annotations
 import jax
 
 
+def _mk_mesh(shape, axes):
+    # axis_types= (and jax.sharding.AxisType) only exist on newer jax;
+    # older versions build the same Auto-typed mesh without the kwarg.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data"):
     """Small mesh over whatever devices exist (examples/tests)."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return _mk_mesh((n,), (axis,))

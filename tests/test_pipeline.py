@@ -17,8 +17,8 @@ new ``spec_*`` observables.  Layers under test:
   a dense NumPy oracle;
 * ``protocol.seed_round_state``: a seeded engine call equals the
   unseeded call on stores the speculation snapshot is stale against;
-* pipelined sessions over ragged bucketed streams, all engines
-  (pcc / occ seeded; pogl / destm fall back serially), D in {1, 2},
+* pipelined sessions over ragged bucketed streams, all four engines
+  seeded (pcc / occ since PR 7, destm / pogl since PR 10), D in {1, 2},
   shards in {1, 8}, both bucket ladders, ingress ``serve``;
 * ``protocol.wave_commit(block=B)``: decision-identical to B=1 with
   fewer `while_loop` trips on a deep neighbor conflict chain.
@@ -175,6 +175,29 @@ class TestSeededEngines:
         assert int(t2b.spec_executed) == 16
         assert int(t2b.spec_rounds) == (int(t2b.spec_invalidated) > 0)
 
+    @pytest.mark.parametrize("engine", ["destm", "pogl"])
+    def test_seeded_equals_unseeded_lane_engines(self, engine):
+        # destm / pogl go through the registry's uniform raw signature
+        # (they need lanes); same stale-seed setup as above
+        from repro.core.engine import get_engine
+        eng = get_engine(engine)
+        wl1, wl2 = _wl(16, 1.0, 1), _wl(16, 1.0, 2)
+        seq = jnp.arange(1, 17, dtype=jnp.int32)
+        lanes = jnp.asarray(wl2.lanes, jnp.int32)
+        store0 = make_store(N_OBJ)
+        s1, _ = eng.raw(store0, wl1.batch,
+                        seq, jnp.asarray(wl1.lanes, jnp.int32), 8)
+        s2, t2 = eng.raw(s1, wl2.batch, seq, lanes, 8)
+        seed = protocol.spec_execute(store0, wl2.batch)  # stale snapshot
+        s2b, t2b = eng.raw_spec(s1, wl2.batch, seq, lanes, 8, seed)
+        np.testing.assert_array_equal(np.asarray(s2.values),
+                                      np.asarray(s2b.values))
+        np.testing.assert_array_equal(np.asarray(s2.versions),
+                                      np.asarray(s2b.versions))
+        assert int(s2.gv) == int(s2b.gv)
+        _assert_traces_match([t2], [t2b], engine)
+        assert int(t2b.spec_executed) == 16
+
     def test_fresh_seed_invalidates_nothing(self):
         wl = _wl(16, 0.5, 7)
         seq = jnp.arange(1, 17, dtype=jnp.int32)
@@ -196,8 +219,8 @@ class TestPipelinedSession:
         assert s0.replay_log() == s1.replay_log()
         assert int(s0.store.gv) == int(s1.store.gv)
         _assert_traces_match(t0, t1, f"{engine} D={depth}")
-        if engine in ("pcc", "occ"):   # seeded engines record overlap
-            assert sum(int(t.spec_executed) for t in t1) > 0
+        # all four engines are seeded and must record the overlap
+        assert sum(int(t.spec_executed) for t in t1) > 0
 
     @pytest.mark.parametrize("shards", [8])
     @pytest.mark.parametrize("engine", ["pcc", "occ"])
@@ -343,7 +366,7 @@ class TestBlockedWaveCommit:
 # ------------------------------------------------------- hypothesis property
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000), st.sampled_from([1, 2]),
-       st.sampled_from(["pcc", "occ"]),
+       st.sampled_from(["pcc", "occ", "destm", "pogl"]),
        st.floats(0.0, 1.5))
 def test_pipelined_equals_serial_property(seed, depth, engine, skew):
     s0, t0, s1, t1 = _run_sessions(engine, depth, shards=1,

@@ -113,8 +113,12 @@ class TestOrderedReduce:
         x = jnp.asarray(np.random.default_rng(0).normal(size=(7, 13)),
                         jnp.float32)
         got = ordered_tree_sum(x)
+        # fixed tree order != jnp's reduction order: agreement is only up
+        # to f32 associativity (~2.5e-6 rel on this draw), same bound the
+        # ring-reduce test uses.  Bitwise determinism is asserted by
+        # test_tree_sum_fixed_order, not here.
         np.testing.assert_allclose(np.asarray(got),
-                                   np.asarray(x.sum(0)), rtol=1e-6)
+                                   np.asarray(x.sum(0)), rtol=1e-5)
 
     def test_tree_sum_fixed_order(self):
         """Same values, same order -> bitwise equal across calls."""
@@ -136,8 +140,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.optim import ordered_ring_reduce
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(8)
 x = jnp.arange(8 * 24, dtype=jnp.float32).reshape(8, 24) / 7.0
 f = shard_map(lambda y: ordered_ring_reduce(y[0], "data")[None],
               mesh=mesh, in_specs=P("data", None),
